@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: graph fixtures + trainer drivers.
+
+All throughput numbers on this CPU container are RELATIVE (ours vs the
+GraphVite-style parameter-server baseline at identical device counts); the
+paper's absolute V100 numbers are out of reach by construction and are not
+claimed. Structural counters (host syncs, bytes staged through host) are
+reported alongside, since they are what scales the gap on real hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (HybridConfig, HybridEmbeddingTrainer,
+                        ParameterServerTrainer, build_episode_blocks)
+from repro.core import eval as ev
+from repro.graph.csr import CSRGraph, build_csr
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+
+def sbm_graph(n=3000, k=20, seed=0, rounds=40, batch=40000):
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, k, n)
+    src, dst = [], []
+    for _ in range(rounds):
+        a = rng.integers(0, n, batch)
+        b = rng.integers(0, n, batch)
+        keep = rng.random(batch) < np.where(comm[a] == comm[b], 0.05, 0.0008)
+        src.append(a[keep]); dst.append(b[keep])
+    return build_csr(np.stack([np.concatenate(src), np.concatenate(dst)], 1), n)
+
+
+def collect_epoch_pairs(g: CSRGraph, epoch: int, *, episodes=1, walk_length=10,
+                        window=5):
+    store = MemorySampleStore()
+    WalkEngine(g, WalkConfig(walk_length=walk_length, window=window,
+                             episodes=episodes, seed=epoch),
+               store).run_epoch(epoch)
+    return [np.asarray(store.get(epoch, e)) for e in range(episodes)]
+
+
+def time_epochs(trainer, g: CSRGraph, cfg: HybridConfig, epochs: int,
+                *, warmup: int = 1):
+    """Returns (mean epoch seconds, last loss). warmup epochs excluded."""
+    times, loss = [], float("nan")
+    for epoch in range(epochs + warmup):
+        pairs_list = collect_epoch_pairs(g, epoch)
+        t0 = time.perf_counter()
+        for pairs in pairs_list:
+            eb = build_episode_blocks(pairs, trainer.part,
+                                      pad_multiple=cfg.minibatch)
+            loss = trainer.train_episode(
+                eb, lr=cfg.lr * max(1 - epoch / (epochs + warmup), 0.05))
+        if epoch >= warmup:
+            times.append(time.perf_counter() - t0)
+    return float(np.mean(times)), loss
+
+
+def vv_auc(V, test_e, neg_e):
+    Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
+    return ev.auc_score(
+        np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
+        np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))

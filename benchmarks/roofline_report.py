@@ -1,0 +1,37 @@
+"""Render the §Dry-run / §Roofline tables from the dry-run JSON artifacts
+(deliverable g). Not a timing benchmark: numbers come from compiled HLO."""
+import json
+import os
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+EXP_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments")
+
+
+def load(path):
+    p = os.path.join(EXP_DIR, path)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def run():
+    out = []
+    for fname, tag in (("dryrun_single.json", "1pod"),
+                       ("dryrun_multipod.json", "2pod")):
+        recs = load(fname)
+        ok = [r for r in recs if "error" not in r]
+        out.append(f"roofline/{tag}_pass,{len(ok)},of={len(recs)}")
+        for r in ok:
+            t = r["roofline"]
+            dom = t["dominant"]
+            out.append(
+                f"roofline/{tag}/{r['arch']}/{r['shape']},"
+                f"{t[dom + '_s'] * 1e3:.2f},"
+                f"dom={dom};c={t['compute_s']*1e3:.2f}ms;"
+                f"m={t['memory_s']*1e3:.2f}ms;x={t['collective_s']*1e3:.2f}ms;"
+                f"useful={r['useful_flops_ratio']:.3f};"
+                f"peak_gib={r['memory']['peak_bytes']/2**30:.1f}")
+    return out

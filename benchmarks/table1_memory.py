@@ -1,0 +1,26 @@
+"""Table I analogue: memory-cost model of the system for the paper's
+billion-node network, checked against our partitioned layout."""
+from repro.configs.tencent_embedding import CONFIG
+from repro.core.partition import NodePartition
+
+
+def run():
+    rows = []
+    nodes = CONFIG.num_nodes
+    edges = 300e9
+    aug = edges * 10  # walk distance x context length (paper: E' ~ 3T)
+    d = CONFIG.dim
+    rows.append(("nodes", nodes, f"{nodes*4/2**30:.2f}GB(int32 ids)"))
+    rows.append(("edges", edges, f"{edges*8/2**40:.2f}TB"))
+    rows.append(("augmented_edges", aug, f"{aug*8/2**40:.2f}TB"))
+    rows.append(("vertex_embeddings", nodes * d, f"{nodes*d*4/2**30:.1f}GB"))
+    rows.append(("context_embeddings", nodes * d, f"{nodes*d*4/2**30:.1f}GB"))
+    # per-device budget on the production mesh (16x16, k=4)
+    part = NodePartition(nodes, dims=(16, 16), subparts=CONFIG.subparts)
+    per_dev = part.padded_rows_per_shard * d * 4 * 2  # vert+ctx
+    rows.append(("per_device_embeddings(256 chips)", part.padded_rows_per_shard,
+                 f"{per_dev/2**30:.2f}GB"))
+    out = []
+    for name, size, storage in rows:
+        out.append(f"table1_memory/{name},{size:.4g},{storage}")
+    return out

@@ -1,0 +1,34 @@
+"""Table III analogue: per-epoch training time, ours vs the GraphVite-style
+parameter-server baseline, on one device (CPU) — relative speedup +
+structural counters. Multi-device scaling is table6."""
+import time
+
+from repro.core import HybridConfig, HybridEmbeddingTrainer, ParameterServerTrainer
+from benchmarks.common import sbm_graph, time_epochs
+
+
+def run():
+    g = sbm_graph(n=4000, rounds=60)
+    cfg = HybridConfig(dim=96, minibatch=64, negatives=5, subparts=2,
+                       neg_pool=4096, lr=0.025)
+    out = []
+
+    hy = HybridEmbeddingTrainer(g.num_nodes, _mesh(), cfg,
+                                degrees=g.degrees())
+    hy.init_embeddings()
+    t_h, loss_h = time_epochs(hy, g, cfg, epochs=3)
+
+    ps = ParameterServerTrainer(g.num_nodes, 1, cfg, degrees=g.degrees())
+    t_p, loss_p = time_epochs(ps, g, cfg, epochs=3)
+
+    out.append(f"table3/ours_epoch_s,{t_h*1e6:.0f},loss={loss_h:.3f}")
+    out.append(f"table3/graphvite_ps_epoch_s,{t_p*1e6:.0f},loss={loss_p:.3f}")
+    out.append(f"table3/speedup,{t_p/t_h:.3f},edges={g.num_edges}")
+    out.append(f"table3/ps_host_syncs,{ps.counters.host_syncs},"
+               f"bytes_through_host={ps.counters.bytes_through_host}")
+    return out
+
+
+def _mesh():
+    import jax
+    return jax.make_mesh((1, jax.device_count()), ("data", "model"))

@@ -1,0 +1,53 @@
+"""Tables VI/VII + Fig. 6/7 analogue: intra-node scalability at 1/2/4/8
+devices, ours vs the parameter-server baseline.
+
+Device counts require fresh XLA processes (device count is locked at first
+jax init), so each point runs in a subprocess with
+--xla_force_host_platform_device_count=N. On one physical CPU core the
+*compute* cannot speed up; what the benchmark shows is the per-device-count
+dispatch/communication structure (ours: one jitted episode; PS baseline:
+4*n^2*k host round-trips per epoch) and the paper's schedule invariance.
+"""
+import json
+import os
+import subprocess
+import sys
+
+_WORKER = r"""
+import json, sys, time
+import numpy as np, jax
+from repro.core import HybridConfig, HybridEmbeddingTrainer, ParameterServerTrainer
+from benchmarks.common import sbm_graph, time_epochs
+n_dev = jax.device_count()
+g = sbm_graph(n=2000, rounds=30)
+cfg = HybridConfig(dim=64, minibatch=64, negatives=5, subparts=2,
+                   neg_pool=2048, lr=0.025)
+mesh = jax.make_mesh((1, n_dev), ('data', 'model'))
+hy = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+hy.init_embeddings()
+t_h, _ = time_epochs(hy, g, cfg, epochs=2)
+ps = ParameterServerTrainer(g.num_nodes, n_dev, cfg, degrees=g.degrees())
+t_p, _ = time_epochs(ps, g, cfg, epochs=2)
+print(json.dumps({"devices": n_dev, "ours_s": t_h, "ps_s": t_p,
+                  "ps_host_syncs": ps.counters.host_syncs}))
+"""
+
+
+def run():
+    out = []
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for n in (1, 2, 4, 8):
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+                   PYTHONPATH=os.path.join(repo, "src") + ":" + repo)
+        r = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                           capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            out.append(f"table6/devices{n},ERROR,{r.stderr.splitlines()[-1][:120]}")
+            continue
+        rec = json.loads(r.stdout.strip().splitlines()[-1])
+        out.append(f"table6/ours_{n}dev_epoch_s,{rec['ours_s']*1e6:.0f},")
+        out.append(f"table6/ps_{n}dev_epoch_s,{rec['ps_s']*1e6:.0f},"
+                   f"host_syncs={rec['ps_host_syncs']}")
+        out.append(f"table6/speedup_{n}dev,{rec['ps_s']/rec['ours_s']:.3f},")
+    return out

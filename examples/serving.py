@@ -1,0 +1,69 @@
+"""Serve a reduced model with batched requests: chunked prefill + decode
+loop with ring-buffer KV caches (the decode_32k / long_500k production path
+at laptop scale). Works for every assigned arch, including SSM (state
+caches) and enc-dec (cross-attention memory).
+
+    PYTHONPATH=src python examples/serving.py --arch mamba2-1.3b --tokens 32
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgs
+from repro.models import transformer as tfm
+from repro.train.train_step import synthetic_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=cfgs.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding window (0=full attention)")
+    args = ap.parse_args()
+
+    cfg = cfgs.get_config(args.arch).reduced(layers=2, d_model=256, experts=4)
+    if args.window:
+        cfg = dataclasses.replace(cfg, sliding_window=args.window)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_batch(cfg, args.batch, args.prompt_len).items()}
+    cache_len = args.prompt_len + args.tokens + 8
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+
+    prefill = jax.jit(lambda p, b: tfm.prefill(p, b, cfg, cache_len))
+    decode = jax.jit(lambda p, t, c: tfm.decode_step(p, t, c, cfg))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+    outs = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+        outs.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(outs, 1)
+    print(f"{args.arch}: prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.1f}ms (incl. compile); "
+          f"{args.tokens} tokens decoded at "
+          f"{(args.tokens-1)*args.batch/max(t_decode,1e-9):.1f} tok/s")
+    print("generated ids (req 0):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Architecture registry: ``--arch <id>`` selection + per-shape input specs.
+
+Every assigned architecture is a module exporting ``CONFIG``; this package
+maps public ids to configs, derives per-shape adjusted configs
+(:func:`for_shape`) and builds the ShapeDtypeStruct input specs the dry-run
+lowers against (:func:`input_specs` — no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models.config import ModelConfig
+
+from repro.configs import (jamba_v0_1_52b, qwen1_5_4b, qwen2_5_32b,
+                           qwen1_5_0_5b, granite_3_2b, deepseek_v3_671b,
+                           llava_next_mistral_7b, mamba2_1_3b,
+                           seamless_m4t_large_v2, phi3_5_moe_42b,
+                           tencent_embedding)
+
+ARCHS = {
+    "jamba-v0.1-52b": jamba_v0_1_52b.CONFIG,
+    "qwen1.5-4b": qwen1_5_4b.CONFIG,
+    "qwen2.5-32b": qwen2_5_32b.CONFIG,
+    "qwen1.5-0.5b": qwen1_5_0_5b.CONFIG,
+    "granite-3-2b": granite_3_2b.CONFIG,
+    "deepseek-v3-671b": deepseek_v3_671b.CONFIG,
+    "llava-next-mistral-7b": llava_next_mistral_7b.CONFIG,
+    "mamba2-1.3b": mamba2_1_3b.CONFIG,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe_42b.CONFIG,
+    "tencent-embedding": tencent_embedding.CONFIG,
+}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+# --------------------------------------------------------------------------
+# per-shape config adjustment
+# --------------------------------------------------------------------------
+def for_shape(cfg: ModelConfig, shape: InputShape, *,
+              dtype: str = "bfloat16") -> ModelConfig:
+    """Adjust a full config for one input shape (dry-run numerics: bf16).
+
+    long_500k policy (DESIGN.md §4): SSM/hybrid/MLA archs decode the full
+    524k context natively (O(1) state / few attn layers / compressed cache);
+    plain-GQA archs switch to an 8192 sliding window — the explicitly
+    implemented sub-quadratic variant.
+    """
+    changes: dict = dict(param_dtype=dtype, compute_dtype=dtype)
+    if shape.kind == "decode":
+        changes["remat"] = False
+        changes["train_microbatches"] = 1
+    if shape.name == "long_500k":
+        native_long = (cfg.arch_type in ("ssm", "hybrid")) or cfg.mla
+        if not native_long:
+            changes["sliding_window"] = 8192
+    if shape.kind == "prefill" and cfg.prefill_chunk:
+        # chunk must divide the (possibly prefix-extended) prefill length
+        changes["prefill_chunk"] = cfg.prefill_chunk
+    return dataclasses.replace(cfg, **changes)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; nothing is allocated)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model inputs for (arch, shape) as ShapeDtypeStructs.
+
+    Train/prefill: the token budget per sequence is `seq_len`; VLM spends
+    `frontend_len_cap` of it on stub patch embeddings, audio splits it
+    half frames / half tokens (DESIGN.md §4).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.modality == "vision":
+            P = cfg.frontend_len_cap
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+                "positions": jax.ShapeDtypeStruct((B, S - P), i32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), dt),
+            }
+        if cfg.modality == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, S // 2), i32),
+                "positions": jax.ShapeDtypeStruct((B, S // 2), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "positions": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of length S (built separately)
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}

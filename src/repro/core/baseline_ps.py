@@ -1,0 +1,156 @@
+"""GraphVite-style parameter-server baseline (paper §VI-C, Tables III/VI).
+
+The paper's speedups are measured against GraphVite [4]: a single-node system
+where the CPU acts as a parameter server — embeddings live in host memory,
+each round the vertex (and sample) blocks are copied host→device, trained,
+and copied back, with **no pipeline overlap** and **all inter-GPU exchange
+bouncing through the host**. We implement the same execution structure so the
+benchmark comparison is structural, not a strawman:
+
+  * identical SGNS math (same `kernels.ops.sgns_step`),
+  * identical 2D orthogonal-block schedule,
+  * but: synchronous host round-trips for every vertex block each round,
+    no ppermute, no overlap, per-round dispatch from Python.
+
+On this CPU-only container the measured gap is dispatch + copy overhead; the
+benchmark additionally reports *structural* counters (host syncs, bytes
+through host) that scale the gap on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridConfig
+from repro.core.partition import NodePartition, EpisodeBlocks
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class PSCounters:
+    host_syncs: int = 0
+    bytes_through_host: int = 0
+
+
+class ParameterServerTrainer:
+    """Single-node multi-device trainer with CPU parameter server."""
+
+    def __init__(self, num_nodes: int, num_devices: int, cfg: HybridConfig,
+                 degrees: np.ndarray | None = None):
+        self.cfg = cfg
+        self.num_nodes = num_nodes
+        self.devices = jax.devices()[:num_devices]
+        self.n = num_devices
+        # same partition geometry as the hybrid trainer on a (1, n) mesh
+        self.part = NodePartition(num_nodes, dims=(1, num_devices),
+                                  subparts=cfg.subparts)
+        self.counters = PSCounters()
+        rng = np.random.default_rng(cfg.seed)
+        d = cfg.dim
+        self.vert = ((rng.random((self.part.padded_num_nodes, d),
+                                 dtype=np.float32) - 0.5) / d)
+        self.ctx = np.zeros((self.part.padded_num_nodes, d), np.float32)
+        self._pool = self._build_pool(degrees)
+        self._block_fn = self._make_block_fn()
+
+    def _build_pool(self, degrees):
+        part, cfg = self.part, self.cfg
+        rng = np.random.default_rng(cfg.seed + 17)
+        rows = part.padded_rows_per_shard
+        pool = np.zeros((part.num_shards, cfg.neg_pool), np.int32)
+        for s in range(part.num_shards):
+            lo, hi = s * rows, min((s + 1) * rows, self.num_nodes)
+            if hi <= lo:
+                continue
+            if degrees is None:
+                pool[s] = rng.integers(0, hi - lo, cfg.neg_pool)
+            else:
+                w = np.maximum(degrees[lo:hi].astype(np.float64) ** 0.75, 1e-12)
+                pool[s] = rng.choice(hi - lo, size=cfg.neg_pool, p=w / w.sum())
+        return pool
+
+    def _make_block_fn(self):
+        cfg = self.cfg
+        mb, S = cfg.minibatch, cfg.negatives
+
+        def block_fn(vert_shard, ctx_shard, blk, cnt, pool, key, lr):
+            bmax = blk.shape[0]
+            nmb = bmax // mb
+            blk3 = blk.reshape(nmb, mb, 2)
+            offs = jnp.arange(nmb, dtype=jnp.int32) * mb
+
+            def body(carry, xs):
+                v, c, key, lacc = carry
+                blk_mb, off = xs
+                key, kneg = jax.random.split(key)
+                idx_n = pool[jax.random.randint(kneg, (S,), 0, pool.shape[0])]
+                mask = ((off + jnp.arange(mb, dtype=jnp.int32)) < cnt).astype(v.dtype)
+                v, c, loss = ops.sgns_step(v, c, blk_mb[:, 0], blk_mb[:, 1],
+                                           idx_n, mask, lr, impl=cfg.impl,
+                                           reduction=cfg.reduction)
+                return (v, c, key, lacc + loss), None
+
+            (vert_shard, ctx_shard, key, loss), _ = jax.lax.scan(
+                body, (vert_shard, ctx_shard, key, jnp.float32(0.0)),
+                (blk3, offs))
+            return vert_shard, ctx_shard, loss
+
+        return jax.jit(block_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------ train
+    def train_episode(self, eb: EpisodeBlocks, *, lr: float | None = None) -> float:
+        """Orthogonal-block rounds; every vertex block round-trips the host."""
+        cfg = self.cfg
+        part = self.part
+        n, k = self.n, part.subparts
+        rows = part.padded_rows_per_shard
+        rows_sub = part.rows_per_subpart
+        lr_f = np.float32(cfg.lr if lr is None else lr)
+        # blocks layout: (P, 1, n, k, Bmax, 2) on the (1, n) ring
+        blocks = eb.blocks
+        counts = eb.counts
+        loss_sum, samples = 0.0, max(int(counts.sum()), 1)
+        # context shards pinned per device (loaded once per episode — GraphVite
+        # keeps them on device) — but vertex shards bounce via the host.
+        ctx_dev = [jax.device_put(self.ctx[i * rows:(i + 1) * rows],
+                                  self.devices[i]) for i in range(n)]
+        pool_dev = [jax.device_put(self._pool[i], self.devices[i])
+                    for i in range(n)]
+        step = 0
+        for r in range(n):  # ring rounds
+            for i in range(n):  # devices (serial on CPU; parallel on GPU)
+                vs = (i - r) % n  # vertex shard at device i this round
+                for j in range(k):
+                    blk = blocks[i, 0, r, j]
+                    cnt = counts[i, 0, r, j]
+                    if cnt == 0:
+                        continue
+                    lo = vs * rows + j * rows_sub
+                    # host -> device (the PS fetch)
+                    v_dev = jax.device_put(self.vert[lo:lo + rows_sub],
+                                           self.devices[i])
+                    blk_dev = jax.device_put(np.asarray(blk), self.devices[i])
+                    key = jax.random.PRNGKey(cfg.seed + 131 * step)
+                    step += 1
+                    v_dev, ctx_dev[i], loss = self._block_fn(
+                        v_dev, ctx_dev[i], blk_dev, jnp.int32(cnt),
+                        pool_dev[i], key, lr_f)
+                    # device -> host (the PS writeback), synchronous
+                    self.vert[lo:lo + rows_sub] = np.asarray(v_dev)
+                    loss_sum += float(loss)
+                    self.counters.host_syncs += 2
+                    self.counters.bytes_through_host += 2 * v_dev.size * 4
+        for i in range(n):
+            self.ctx[i * rows:(i + 1) * rows] = np.asarray(ctx_dev[i])
+            self.counters.host_syncs += 1
+            self.counters.bytes_through_host += ctx_dev[i].size * 4
+        return loss_sum / samples
+
+    def embeddings(self) -> np.ndarray:
+        return self.part.unpad_table(self.vert)
+
+    def context_embeddings(self) -> np.ndarray:
+        return self.part.unpad_table(self.ctx)

@@ -1,0 +1,160 @@
+"""Hierarchical data partitioning (paper §III-B).
+
+Two cooperating partitions:
+
+* **Node partition** — both embedding matrices are row-partitioned into
+  P = Q·D·M contiguous shards (one per device). The vertex shard on each
+  device is further split into ``k`` sub-parts. Nodes are block-assigned:
+  node n → shard n // rows, local row n % rows.
+
+* **2D edge partition** — an episode's edge samples (u, v) are bucketed by
+  (vertex sub-shard of u, context shard of v) and laid out *by the rotation
+  schedule*: ``blocks[dev, u, t, r, j]`` holds exactly the samples device
+  ``dev`` can train at round (u, t, r) on sub-part j, with both endpoints
+  resident. This is the paper's "orthogonal vertex usage" guarantee.
+
+Everything here is host-side numpy; the arrays it emits are what
+`core.hybrid` device_puts (pipelined, see `core.pipeline`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import rotation
+
+
+@dataclasses.dataclass(frozen=True)
+class NodePartition:
+    """Row partition of the (padded) node id space."""
+
+    num_nodes: int
+    dims: tuple[int, ...]        # ring dims, e.g. (D, M) or (Q, D, M)
+    subparts: int = 4            # paper's k
+
+    @property
+    def num_shards(self) -> int:
+        return int(np.prod(self.dims))
+
+    @property
+    def rows_per_shard(self) -> int:
+        return -(-self.num_nodes // self.num_shards)  # ceil
+
+    @property
+    def rows_per_subpart(self) -> int:
+        return -(-self.rows_per_shard // self.subparts)
+
+    @property
+    def padded_rows_per_shard(self) -> int:
+        return self.rows_per_subpart * self.subparts
+
+    @property
+    def padded_num_nodes(self) -> int:
+        return self.padded_rows_per_shard * self.num_shards
+
+    # node id -> (shard, subpart, row-within-subpart); vectorized
+    def locate(self, nodes: np.ndarray):
+        rows = self.padded_rows_per_shard
+        shard = nodes // rows
+        local = nodes % rows
+        sub = local // self.rows_per_subpart
+        subrow = local % self.rows_per_subpart
+        return shard, sub, subrow
+
+    def shard_coord(self, shard: np.ndarray):
+        """Flat shard id -> mesh coordinate arrays."""
+        coords = []
+        rem = shard
+        for n in self.dims[::-1]:
+            coords.append(rem % n)
+            rem = rem // n
+        return tuple(coords[::-1])
+
+    def pad_table(self, table: np.ndarray) -> np.ndarray:
+        """(N, d) -> (padded_N, d) so shards/subparts divide evenly."""
+        pad = self.padded_num_nodes - table.shape[0]
+        if pad == 0:
+            return table
+        return np.concatenate([table, np.zeros((pad, table.shape[1]), table.dtype)])
+
+    def unpad_table(self, table: np.ndarray) -> np.ndarray:
+        return table[: self.num_nodes]
+
+
+@dataclasses.dataclass
+class EpisodeBlocks:
+    """Device-major block layout for one episode.
+
+    blocks: (P, Q, D, M, k, Bmax, 2) int32 — (vertex subrow, context row).
+    counts: (P, Q, D, M, k) int32 — valid samples per cell.
+    dropped: samples discarded because a cell overflowed Bmax (0 unless capped).
+    """
+
+    blocks: np.ndarray
+    counts: np.ndarray
+    dropped: int
+
+    @property
+    def block_cap(self) -> int:
+        return int(self.blocks.shape[-2])
+
+
+def build_episode_blocks(pairs: np.ndarray, part: NodePartition, *,
+                         block_cap: int | None = None,
+                         pad_multiple: int = 64) -> EpisodeBlocks:
+    """Bucket (u, v) pairs into the rotation-schedule block layout."""
+    dims = part.dims
+    P = part.num_shards
+    k = part.subparts
+    u, v = pairs[:, 0].astype(np.int64), pairs[:, 1].astype(np.int64)
+    v_shard, v_sub, v_subrow = part.locate(u)           # u indexes vertex table
+    c_shard = v  # context side: shard id then local row
+    c_shard, _, _ = part.locate(v)
+    c_row = v % part.padded_rows_per_shard
+
+    # the device that trains a pair is the context owner (contexts are pinned)
+    dev = c_shard
+    # the round at which that device holds the pair's vertex shard
+    dev_coords = part.shard_coord(dev)
+    vs_coords = part.shard_coord(v_shard)
+    rnd_coords = [(d - vv) % n for d, vv, n in zip(dev_coords, vs_coords, dims)]
+    rnd_flat = rnd_coords[0]
+    for c, n in zip(rnd_coords[1:], dims[1:]):
+        rnd_flat = rnd_flat * n + c
+
+    cell = (dev * P + rnd_flat) * k + v_sub              # flat cell id
+    n_cells = P * P * k
+    order = np.argsort(cell, kind="stable")
+    cell_sorted = cell[order]
+    counts_flat = np.bincount(cell_sorted, minlength=n_cells)
+    bmax = int(counts_flat.max(initial=0))
+    if block_cap is not None:
+        bmax = min(bmax, block_cap)
+    bmax = max(pad_multiple, -(-bmax // pad_multiple) * pad_multiple)
+
+    starts = np.zeros(n_cells + 1, dtype=np.int64)
+    np.cumsum(counts_flat, out=starts[1:])
+    rank = np.arange(cell.size, dtype=np.int64) - starts[cell_sorted]
+    keep = rank < bmax
+    dropped = int((~keep).sum())
+
+    blocks = np.zeros((n_cells, bmax, 2), dtype=np.int32)
+    sel = order[keep]
+    blocks[cell_sorted[keep], rank[keep], 0] = v_subrow[sel]
+    blocks[cell_sorted[keep], rank[keep], 1] = c_row[sel]
+    counts = np.minimum(counts_flat, bmax).astype(np.int32)
+
+    Q_D_M = tuple(dims)
+    blocks = blocks.reshape(P, *Q_D_M, k, bmax, 2)
+    counts = counts.reshape(P, *Q_D_M, k)
+    return EpisodeBlocks(blocks=blocks, counts=counts, dropped=dropped)
+
+
+def episode_input_shapes(part: NodePartition, block_cap: int):
+    """ShapeDtypeStruct-compatible shapes for the dry-run (no allocation)."""
+    P, k = part.num_shards, part.subparts
+    return {
+        "blocks": (P, *part.dims, k, block_cap, 2),
+        "counts": (P, *part.dims, k),
+    }

@@ -1,0 +1,49 @@
+"""Episode pipeline: overlap host-side block building + H2D staging with
+device compute (paper §III-C, Fig. 3 stages 5/7).
+
+On TPU+JAX the intra-episode overlap (stages 2/4/6) is XLA's async collective
+scheduling inside the jitted episode step; what remains for the host is
+preparing episode e+1 (walk consumption, 2D bucketing, device_put) while
+episode e trains. ``EpisodePipeline`` does exactly that with one worker
+thread: jax dispatch is async, so `train_episode` returns as soon as the step
+is enqueued and the worker's `device_put`s interleave with device compute.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.partition import NodePartition, build_episode_blocks
+
+
+class EpisodePipeline:
+    """Prefetches episode blocks one step ahead of training."""
+
+    def __init__(self, store, part: NodePartition, *, pad_multiple: int,
+                 block_cap: int | None = None):
+        self.store = store
+        self.part = part
+        self.pad_multiple = pad_multiple
+        self.block_cap = block_cap
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._next = None
+
+    def _build(self, epoch: int, episode: int):
+        pairs = self.store.get(epoch, episode)
+        return build_episode_blocks(
+            np.asarray(pairs), self.part,
+            block_cap=self.block_cap, pad_multiple=self.pad_multiple)
+
+    def prefetch(self, epoch: int, episode: int) -> None:
+        self._next = self._pool.submit(self._build, epoch, episode)
+
+    def get(self, epoch: int, episode: int):
+        """Returns the prefetched blocks (or builds synchronously on miss)."""
+        if self._next is not None:
+            fut, self._next = self._next, None
+            return fut.result()
+        return self._build(epoch, episode)
+
+    def close(self):
+        self._pool.shutdown(wait=False)

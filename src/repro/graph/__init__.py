@@ -1,0 +1,4 @@
+from repro.graph.csr import CSRGraph, build_csr
+from repro.graph.generators import rmat_graph, powerlaw_graph, mesh_graph
+
+__all__ = ["CSRGraph", "build_csr", "rmat_graph", "powerlaw_graph", "mesh_graph"]

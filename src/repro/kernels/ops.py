@@ -1,0 +1,98 @@
+"""Public jit'd ops over the SGNS kernels.
+
+``impl`` selects the execution path:
+  * ``"ref"``     — pure jnp (XLA). Default on CPU: fast and exact.
+  * ``"pallas"``  — Pallas kernels in interpret mode on CPU, compiled on TPU.
+
+`sgns_step` is the fused edge-minibatch update the hybrid trainer calls in its
+inner loop: gather → grads (MXU tile kernel) → SGD scatter-add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import sgns as _k
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _ON_TPU
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def sgns_grads(v, c, n, mask, *, impl: str = "ref", block_b: int = 256):
+    """loss + (dv, dc, dn) for a shared-negative SGNS minibatch."""
+    if impl == "ref":
+        return _ref.sgns_grads_ref(v, c, n, mask)
+    B = v.shape[0]
+    bb = min(block_b, B) if B % min(block_b, B) == 0 else B
+    vp, cp, mp = (_pad_to(v, bb), _pad_to(c, bb), _pad_to(mask, bb))
+    loss, dv, dc, dn = _k.sgns_grads(vp, cp, n, mp, block_b=bb,
+                                     interpret=_interpret())
+    return loss, dv[:B], dc[:B], dn
+
+
+def gather_rows(table, idx, *, impl: str = "ref"):
+    if impl == "ref":
+        return _ref.gather_rows_ref(table, idx)
+    return _k.gather_rows(table, idx, interpret=_interpret())
+
+
+def scatter_add_rows(table, idx, upd, *, impl: str = "ref"):
+    if impl == "ref":
+        return _ref.scatter_add_rows_ref(table, idx, upd)
+    return _k.scatter_add_rows(table, idx, upd, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "reduction"))
+def sgns_step(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *, impl: str = "ref",
+              reduction: str = "sum"):
+    """One SGNS SGD minibatch against local (vert, ctx) shards.
+
+    vert: (Nv, d), ctx: (Nc, d); idx_v/idx_c: (B,), idx_n: (S,), mask: (B,).
+    Returns (vert', ctx', summed loss).
+
+    ``reduction="sum"`` is word2vec-faithful: every pair's gradient is applied
+    at full lr, and a shared-negative row accumulates up to B aligned
+    contributions per step. This matches Ji et al. [19] / BlazingText [20]
+    shared-negative batching and is stable for small-to-moderate B (the
+    trainer's minibatch config). ``"mean"`` divides by B — stable at any B but
+    under-weights positives relative to the shared negatives (degenerates; see
+    EXPERIMENTS.md §Perf ablation). Default: sum.
+    """
+    lr_eff = lr / mask.shape[0] if reduction == "mean" else lr
+    if impl == "ref":
+        return _ref.sgns_step_ref(vert, ctx, idx_v, idx_c, idx_n, mask, lr_eff)
+    if impl == "pallas_fused":
+        # single kernel: DMA-gather + grads; rows never round-trip HBM
+        loss, dv, dc, dn = _k.sgns_fused_grads(
+            vert, ctx, idx_v, idx_c, idx_n, mask, interpret=_interpret())
+        vert = scatter_add_rows(vert, idx_v, -lr_eff * dv, impl="pallas")
+        idx_cn = jnp.concatenate([idx_c, idx_n])
+        upd_cn = jnp.concatenate([-lr_eff * dc, -lr_eff * dn])
+        ctx = scatter_add_rows(ctx, idx_cn, upd_cn, impl="pallas")
+        return vert, ctx, loss
+    v = gather_rows(vert, idx_v, impl=impl)
+    c = gather_rows(ctx, idx_c, impl=impl)
+    n = gather_rows(ctx, idx_n, impl=impl)
+    loss, dv, dc, dn = sgns_grads(v, c, n, mask, impl=impl)
+    vert = scatter_add_rows(vert, idx_v, -lr_eff * dv, impl=impl)
+    # combined ctx scatter (see ref.sgns_step_ref: keeps ctx aliasable)
+    idx_cn = jnp.concatenate([idx_c, idx_n])
+    upd_cn = jnp.concatenate([-lr_eff * dc, -lr_eff * dn])
+    ctx = scatter_add_rows(ctx, idx_cn, upd_cn, impl=impl)
+    return vert, ctx, loss

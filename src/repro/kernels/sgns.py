@@ -1,0 +1,281 @@
+"""Pallas TPU kernels for the SGNS hot loop (the paper's CUDA kernel, §II-C).
+
+The paper's performance model says node-embedding training is O(1) arithmetic
+intensity and therefore memory-bound: the hot loop is gather rows → tiny
+dot-products → scatter rows. The TPU-native rethink (DESIGN.md §6):
+
+* **Shared-negative batching** (Ji et al. [19], adopted by the paper's lineage)
+  turns the per-edge level-1 dot products into level-3 ``(B,d) @ (d,S)``
+  matmuls — exactly the shape the 128×128 MXU wants.
+* The whole fwd+bwd for a (Bt, d) tile lives in **VMEM**: one HBM round-trip
+  per row, honoring the memory-bound analysis.
+* Row gathers use **scalar-prefetched indices** so the index-dependent DMA
+  address is known before the block runs (TPU has no hardware gather from
+  HBM; scalar prefetch + per-row BlockSpec index_map is the idiom).
+
+Kernels:
+  * :func:`sgns_grads`      — dense tile kernel: loss + dv/dc/dn grads (MXU).
+  * :func:`gather_rows`     — (N,d) table × (B,) idx → (B,d), scalar prefetch.
+  * :func:`scatter_add_rows`— (N,d) table += upd at idx, aliased output.
+
+All are validated against ``ref.py`` in interpret mode (CPU container); TPU is
+the compilation target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# dense SGNS grads tile kernel
+# --------------------------------------------------------------------------
+def _sgns_grads_kernel(v_ref, c_ref, n_ref, mask_ref,
+                       dv_ref, dc_ref, dn_ref, loss_ref):
+    i = pl.program_id(0)
+    v = v_ref[...].astype(jnp.float32)          # (Bt, d)
+    c = c_ref[...].astype(jnp.float32)          # (Bt, d)
+    n = n_ref[...].astype(jnp.float32)          # (S, d)
+    m = mask_ref[...].astype(jnp.float32)       # (Bt, 1)
+
+    pos = jnp.sum(v * c, axis=-1, keepdims=True)               # (Bt, 1)
+    neg = jax.lax.dot_general(v, n, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Bt, S) MXU
+    g_pos = (jax.nn.sigmoid(pos) - 1.0) * m                    # (Bt, 1)
+    g_neg = jax.nn.sigmoid(neg) * m                            # (Bt, S)
+
+    dv_ref[...] = (g_pos * c + jax.lax.dot_general(
+        g_neg, n, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)).astype(dv_ref.dtype)
+    dc_ref[...] = (g_pos * v).astype(dc_ref.dtype)
+
+    dn_tile = jax.lax.dot_general(g_neg, v, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (S, d)
+    loss_tile = (jnp.sum(m * jax.nn.softplus(-pos))
+                 + jnp.sum(m * jax.nn.softplus(neg)))
+
+    # dn and loss accumulate across the B grid (sequential on TPU).
+    @pl.when(i == 0)
+    def _init():
+        dn_ref[...] = jnp.zeros_like(dn_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    dn_ref[...] += dn_tile.astype(dn_ref.dtype)
+    loss_ref[...] += loss_tile.astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_grads(v, c, n, mask, *, block_b: int = 256, interpret: bool = False):
+    """Pallas version of :func:`repro.kernels.ref.sgns_grads_ref`.
+
+    v, c: (B, d); n: (S, d); mask: (B,). B must be a multiple of block_b
+    (ops.py pads). d, S should be multiples of 128 / 8 for MXU alignment on
+    real hardware; interpret mode accepts anything.
+    """
+    B, d = v.shape
+    S = n.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    mask2 = mask.reshape(B, 1)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, d), v.dtype),      # dv
+        jax.ShapeDtypeStruct((B, d), c.dtype),      # dc
+        jax.ShapeDtypeStruct((S, d), jnp.float32),  # dn (accumulated)
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),  # loss
+    )
+    loss_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    dv, dc, dn, loss = pl.pallas_call(
+        _sgns_grads_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),   # v
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),   # c
+            pl.BlockSpec((S, d), lambda i: (0, 0)),         # n (resident)
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),   # mask
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((S, d), lambda i: (0, 0)),
+            loss_spec,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(v, c, n, mask2)
+    return loss[0, 0], dv, dc, dn.astype(n.dtype)
+
+
+# --------------------------------------------------------------------------
+# FUSED kernel: DMA-gather + grads in one pallas_call (the paper's fused
+# CUDA hot loop, TPU-native: per-row HBM->VMEM async copies from scalar-
+# prefetched indices feed the same MXU tile math as `_sgns_grads_kernel`,
+# so gathered rows never round-trip through HBM between gather and compute).
+# --------------------------------------------------------------------------
+def _sgns_fused_kernel(iv_ref, ic_ref, in_ref, vert_ref, ctx_ref, mask_ref,
+                       dv_ref, dc_ref, dn_ref, loss_ref,
+                       v_s, c_s, n_s, sem):
+    i = pl.program_id(0)
+    Bt = v_s.shape[0]
+    S = n_s.shape[0]
+
+    @pl.when(i == 0)
+    def _load_negatives():           # shared negatives persist across tiles
+        for s in range(S):
+            cp = pltpu.make_async_copy(ctx_ref.at[in_ref[s]], n_s.at[s], sem)
+            cp.start()
+            cp.wait()
+
+    for j in range(Bt):              # gather this tile's rows into VMEM
+        cp = pltpu.make_async_copy(vert_ref.at[iv_ref[i * Bt + j]],
+                                   v_s.at[j], sem)
+        cp.start()
+        cp.wait()
+        cp = pltpu.make_async_copy(ctx_ref.at[ic_ref[i * Bt + j]],
+                                   c_s.at[j], sem)
+        cp.start()
+        cp.wait()
+
+    v = v_s[...].astype(jnp.float32)
+    c = c_s[...].astype(jnp.float32)
+    n = n_s[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)
+
+    pos = jnp.sum(v * c, axis=-1, keepdims=True)
+    neg = jax.lax.dot_general(v, n, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    g_pos = (jax.nn.sigmoid(pos) - 1.0) * m
+    g_neg = jax.nn.sigmoid(neg) * m
+
+    dv_ref[...] = (g_pos * c + jax.lax.dot_general(
+        g_neg, n, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)).astype(dv_ref.dtype)
+    dc_ref[...] = (g_pos * v).astype(dc_ref.dtype)
+    dn_tile = jax.lax.dot_general(g_neg, v, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    loss_tile = (jnp.sum(m * jax.nn.softplus(-pos))
+                 + jnp.sum(m * jax.nn.softplus(neg)))
+
+    @pl.when(i == 0)
+    def _init():
+        dn_ref[...] = jnp.zeros_like(dn_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    dn_ref[...] += dn_tile.astype(dn_ref.dtype)
+    loss_ref[...] += loss_tile.astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_fused_grads(vert, ctx, idx_v, idx_c, idx_n, mask, *,
+                     block_b: int = 256, interpret: bool = False):
+    """Fused gather+grads: rows are DMA'd from the (HBM-resident) tables by
+    index inside the kernel. Returns (loss, dv, dc, dn) like sgns_grads.
+
+    vert: (Nv, d); ctx: (Nc, d); idx_v/idx_c: (B,); idx_n: (S,); mask: (B,).
+    """
+    B = idx_v.shape[0]
+    d = vert.shape[1]
+    S = idx_n.shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    mask2 = mask.reshape(B, 1)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),              # vert (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),              # ctx (HBM)
+            pl.BlockSpec((bb, 1), lambda i, *_: (i, 0)),    # mask tile
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, d), lambda i, *_: (i, 0)),    # dv
+            pl.BlockSpec((bb, d), lambda i, *_: (i, 0)),    # dc
+            pl.BlockSpec((S, d), lambda i, *_: (0, 0)),     # dn (accum)
+            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),     # loss
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bb, d), vert.dtype),
+            pltpu.VMEM((bb, d), ctx.dtype),
+            pltpu.VMEM((S, d), ctx.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    dv, dc, dn, loss = pl.pallas_call(
+        _sgns_fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, d), vert.dtype),
+            jax.ShapeDtypeStruct((B, d), ctx.dtype),
+            jax.ShapeDtypeStruct((S, d), f32),
+            jax.ShapeDtypeStruct((1, 1), f32),
+        ),
+        interpret=interpret,
+    )(idx_v.astype(jnp.int32), idx_c.astype(jnp.int32),
+      idx_n.astype(jnp.int32), vert, ctx, mask2)
+    return loss[0, 0], dv, dc, dn.astype(ctx.dtype)
+
+
+# --------------------------------------------------------------------------
+# row gather via scalar-prefetched indices
+# --------------------------------------------------------------------------
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    del idx_ref  # consumed by the index_map
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(table, idx, *, interpret: bool = False):
+    """(N, d) table, (B,) int32 → (B, d). One grid step per row; the row
+    address comes from the scalar-prefetched index vector (HBM→VMEM DMA)."""
+    B = idx.shape[0]
+    N, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)
+
+
+# --------------------------------------------------------------------------
+# row scatter-add (aliased in/out, sequential grid ⇒ duplicates accumulate)
+# --------------------------------------------------------------------------
+def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref):
+    del idx_ref, table_ref  # table is aliased to out; its rows arrive in out_ref
+    out_ref[...] += upd_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_add_rows(table, idx, upd, *, interpret: bool = False):
+    """table[idx[i]] += upd[i]. The table is aliased input→output; the TPU
+    grid is sequential, so revisiting a row reads the previously written
+    block (read-modify-write semantics)."""
+    B = idx.shape[0]
+    N, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),           # table: alias only
+            pl.BlockSpec((1, d), lambda i, idx: (i, 0)),    # upd row
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_add_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, d), table.dtype),
+        # operand 0 is the scalar-prefetch idx; operand 1 is `table`.
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table, upd)

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract memory / cost / collective statistics (deliverable e).
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`): the
+XLA_FLAGS line above executes before any jax import so 512 host placeholder
+devices exist for `jax.make_mesh`.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] --out experiments/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfgs
+from repro.configs.shapes import SHAPES
+from repro.launch import hlo_cost
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    built = build_step(arch, shape_name, mesh)
+    with mesh:
+        if hasattr(built.fn, "lower"):          # pre-jitted (embedding arch)
+            lowered = built.fn.lower(*built.args)
+        else:
+            jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                             donate_argnums=built.donate)
+            lowered = jitted.lower(*built.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # xla's cost_analysis counts while (scan) bodies once; use our HLO cost
+    # model, which multiplies by trip counts (launch/hlo_cost.py)
+    analysis = hlo_cost.analyze_hlo(hlo)
+    flops = float(analysis["flops"])
+    bytes_acc = float(analysis["bytes"])
+    coll = analysis["collectives"]
+    terms = rl.roofline_terms(flops, bytes_acc, coll["total"])
+
+    shape = SHAPES[shape_name]
+    cfg = cfgs.get_config(arch)
+    mflops = rl.model_flops(cfg, shape)
+    useful = mflops / (flops * n_chips) if flops else 0.0
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_per_device": bytes_acc,
+                 "xla_flops_scan_once": float(xla_cost.get("flops", 0.0))},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops": mflops,
+        "useful_flops_ratio": round(useful, 4),
+    }
+    if verbose:
+        gb = 1 << 30
+        print(f"[{arch} x {shape_name} @ {'x'.join(map(str, rec['mesh']))}] "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"args {rec['memory']['argument_bytes']/gb:.2f}GiB "
+              f"temp {rec['memory']['temp_bytes']/gb:.2f}GiB | "
+              f"flops/dev {flops:.3e} bytes/dev {bytes_acc:.3e} "
+              f"coll/dev {coll['total']:.3e} | dominant {terms['dominant']} "
+              f"(c={terms['compute_s']*1e3:.2f}ms m={terms['memory_s']*1e3:.2f}ms "
+              f"x={terms['collective_s']*1e3:.2f}ms) useful={useful:.2%}")
+    return rec
+
+
+LM_ARCHS = [a for a in cfgs.list_archs() if a != "tencent-embedding"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", default=None,
+                    help="json file with records to skip")
+    args = ap.parse_args()
+
+    pairs: list[tuple[str, str]] = []
+    if args.all:
+        pairs = [(a, s) for a in LM_ARCHS for s in SHAPES]
+        pairs.append(("tencent-embedding", "train_4k"))
+    else:
+        pairs = [(args.arch, args.shape)]
+
+    done = set()
+    records = []
+    if args.skip_existing and os.path.exists(args.skip_existing):
+        with open(args.skip_existing) as f:
+            records = json.load(f)
+        done = {(r["arch"], r["shape"], tuple(r["mesh"])) for r in records}
+
+    for arch, shape in pairs:
+        mesh_shape = (2, 16, 16) if args.multi_pod else (16, 16)
+        if (arch, shape, mesh_shape) in done:
+            continue
+        try:
+            records.append(dryrun_one(arch, shape, multi_pod=args.multi_pod))
+        except Exception:
+            print(f"FAILED: {arch} x {shape}")
+            traceback.print_exc()
+            records.append({"arch": arch, "shape": shape,
+                            "mesh": list(mesh_shape), "error":
+                            traceback.format_exc().splitlines()[-1]})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(records, f, indent=1)
+
+    failures = [r for r in records if "error" in r]
+    print(f"\n{len(records) - len(failures)}/{len(records)} combinations "
+          f"lowered+compiled successfully")
+    if failures:
+        for r in failures:
+            print("  FAIL:", r["arch"], r["shape"], r["error"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

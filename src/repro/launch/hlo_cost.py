@@ -1,0 +1,287 @@
+"""HLO cost analyzer that handles while loops (scans) correctly.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which makes
+scan-over-layers models look ~L-times cheaper than they are. This module
+re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * **flops** — 2 x prod(result dims) x prod(contracting dims) per `dot`
+    (recursing into fusion/call subcomputations), x trip count per while.
+  * **bytes** — per top-level op: result + operand bytes ("write once, read
+    once" HBM model), with slicing ops counted at their *slice* size, not the
+    full operand (a scan reading one layer's weights per iteration must not
+    be billed G full reads of the stack).
+  * **collective bytes** — result-shape bytes per collective op kind, x trip
+    counts. (Ring all-reduce moves ~2x its payload across links; reported
+    raw, the factor is applied in the roofline table.)
+
+Trip counts come from the loop-condition computation (largest integer
+`constant(N)` feeding its compare — jax scans count 0..N). Every number is
+derived from the compiled per-device SPMD module, so terms are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIPS_RE = re.compile(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "broadcast", "reshape"}
+_SLICE_RESULT_ONLY = {"dynamic-slice", "gather", "slice"}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening paren
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict      # op name -> type_str (includes parameters)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(name=m.group(2), ops=[], symbols={})
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        line_nc = _COMMENT_RE.sub("", line)
+        m = _ASSIGN_RE.match(line_nc)
+        if m:
+            name, rhs = m.groups()
+            mm = _OPCODE_RE.search(rhs)
+            if not mm:
+                continue
+            type_str = rhs[: mm.start()]
+            opcode = mm.group(1)
+            rest = rhs[mm.end():]
+            cur.symbols[name] = type_str
+            cur.ops.append(Op(name, type_str, opcode, rest, line_nc.strip()))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVE_KINDS}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVE_KINDS:
+            self.coll[k] += other.coll[k] * mult
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            if s.startswith("ENTRY"):
+                m = _COMP_HDR.match(s)
+                if m:
+                    self.entry = m.group(2)
+                    break
+        if self.entry is None:  # fall back: jit_ main computation
+            cands = [n for n in self.comps if n.startswith("main")]
+            self.entry = cands[0] if cands else next(iter(self.comps))
+        self._cache: dict[str, Cost] = {}
+
+    # ---------------------------------------------------------------- trips
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for op in comp.ops:
+            for c in _CONST_RE.findall(op.line):
+                v = int(c)
+                if v > best and v < 10_000_000:
+                    best = v
+        return best
+
+    def _fusion_is_inplace_update(self, op: "Op") -> bool:
+        """True when a fusion's called computation roots in a scatter /
+        dynamic-update-slice and one operand has the result's shape (the
+        aliasable table)."""
+        for sub in _CALLS_RE.findall(op.line):
+            comp = self.comps.get(sub)
+            if comp and any(o.opcode in ("scatter", "dynamic-update-slice")
+                            for o in comp.ops):
+                return True
+        return False
+
+    # ---------------------------------------------------------------- flops
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        result = _shape_list(op.type_str)
+        out_elems = 1
+        for _, shape in result:
+            for d in shape:
+                out_elems *= d
+        m = _LHS_C_RE.search(op.line)
+        contracting = 1
+        if m:
+            dims = [int(x) for x in m.group(1).split(",") if x]
+            operands = _OPERAND_RE.findall(op.rest)
+            if operands:
+                lhs_type = comp.symbols.get(operands[0])
+                if lhs_type:
+                    shapes = _shape_list(lhs_type)
+                    if shapes:
+                        lhs_shape = shapes[0][1]
+                        for d in dims:
+                            if d < len(lhs_shape):
+                                contracting *= lhs_shape[d]
+        return 2.0 * out_elems * contracting
+
+    # ----------------------------------------------------------- cost recurse
+    def cost_of(self, comp_name: str, *, top_bytes: bool = True) -> Cost:
+        key = (comp_name, top_bytes)
+        if key in self._cache:
+            return self._cache[key]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._cache[key] = total  # guard vs cycles
+        for op in comp.ops:
+            if op.opcode == "while":
+                mt = _TRIPS_RE.search(op.line)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    cond = _COND_RE.search(op.line)
+                    trips = self.trip_count(cond.group(1)) if cond else 1
+                body = _BODY_RE.search(op.line)
+                if body:
+                    total.add(self.cost_of(body.group(1)), trips)
+                continue
+            if op.opcode == "dot":
+                total.flops += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                # rough: 2 * out_elems * kernel elems (kernel = operand 1)
+                out = _bytes_of(op.type_str)
+                total.flops += 2.0 * out
+            elif op.opcode in ("fusion", "call", "reduce", "map", "sort",
+                               "scatter", "select-and-scatter",
+                               "conditional"):
+                for sub in set(_CALLS_RE.findall(op.line)):
+                    # flops only inside subcomputations; their memory traffic
+                    # is represented by this op's operands/result below
+                    sub_cost = self.cost_of(sub, top_bytes=False)
+                    total.flops += sub_cost.flops
+                    for k in _COLLECTIVE_KINDS:
+                        total.coll[k] += sub_cost.coll[k]
+            kind = op.opcode.removesuffix("-start")
+            if kind in _COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+                total.coll[kind] += _bytes_of(op.type_str)
+            # ---- bytes ----
+            if not top_bytes:
+                continue
+            if op.opcode in _SKIP_BYTES or op.opcode.endswith("-done"):
+                continue
+            res_bytes = _bytes_of(op.type_str)
+            if op.opcode in _SLICE_RESULT_ONLY:
+                total.bytes += 2.0 * res_bytes
+            elif op.opcode in ("dynamic-update-slice", "scatter"):
+                operands = _OPERAND_RE.findall(op.rest)
+                upd = comp.symbols.get(operands[1]) if len(operands) > 1 else None
+                ub = _bytes_of(upd) if upd else res_bytes
+                total.bytes += 2.0 * min(ub, res_bytes)
+            elif op.opcode == "fusion" and self._fusion_is_inplace_update(op):
+                # fusion wrapping a scatter / dynamic-update-slice whose
+                # result aliases a same-shaped operand: traffic is the
+                # read-modify-write of the updated rows, i.e. ~2x the small
+                # operands (updates + indices), not the whole table.
+                for on in _OPERAND_RE.findall(op.rest.split("metadata=")[0]):
+                    t = comp.symbols.get(on)
+                    if t:
+                        b = _bytes_of(t)
+                        if b < res_bytes:
+                            total.bytes += 2.0 * b
+            else:
+                total.bytes += res_bytes
+                # fusion operands are streamed, and gather-style fusions
+                # touch only result-sized slices of their big operands: cap
+                # each operand's contribution at 4x the result size.
+                cap = 4 * res_bytes if op.opcode == "fusion" else None
+                for on in _OPERAND_RE.findall(op.rest.split("metadata=")[0]):
+                    t = comp.symbols.get(on)
+                    if t:
+                        b = _bytes_of(t)
+                        total.bytes += min(b, cap) if cap is not None else b
+        self._cache[key] = total
+        return total
+
+    def analyze(self) -> dict:
+        c = self.cost_of(self.entry)
+        coll_total = sum(c.coll.values())
+        return {"flops": c.flops, "bytes": c.bytes,
+                "collectives": dict(c.coll, total=coll_total)}
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloCostModel(text).analyze()

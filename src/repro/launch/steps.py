@@ -1,0 +1,143 @@
+"""Step builders: for an (arch, shape, mesh) triple produce the jit-able
+step function, abstract inputs (ShapeDtypeStructs only — nothing allocated),
+and input shardings. Used by the dry-run, the roofline report, and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgs
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import data_axes_of
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.sharding.specs import batch_spec, param_shardings
+from repro.train.optimizer import make_optimizer
+from repro.train.serve_step import (cache_len_for, cache_shardings,
+                                    cache_specs, make_decode_step,
+                                    make_prefill_step)
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: object                 # callable to jit
+    args: tuple                # abstract ShapeDtypeStructs
+    in_shardings: tuple
+    donate: tuple = ()
+    meta: dict | None = None   # params for MODEL_FLOPS etc.
+
+
+def _abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _batch_struct(cfg: ModelConfig, shape: InputShape):
+    return cfgs.input_specs(cfg, shape)
+
+
+def _batch_shardings(batch_struct, shape: InputShape, mesh):
+    bs = batch_spec(shape.global_batch, mesh)
+
+    def one(leaf):
+        return NamedSharding(mesh, P(*bs, *((None,) * (len(leaf.shape) - 1))))
+    return jax.tree.map(one, batch_struct)
+
+
+def build_lm_step(cfg: ModelConfig, shape: InputShape, mesh) -> BuiltStep:
+    data_axes = data_axes_of(mesh)
+    cfg = cfgs.for_shape(cfg, shape)
+    cfg = dataclasses.replace(cfg, tp_size=int(mesh.shape.get("model", 1)))
+    params = _abstract_params(cfg)
+    p_sh = param_shardings(params, mesh)
+
+    if shape.kind == "train":
+        step_fn, opt = make_train_step(cfg, mesh=mesh, data_axes=data_axes)
+        opt_state = jax.eval_shape(opt.init, params)
+        o_sh = param_shardings(opt_state, mesh)
+        batch = _batch_struct(cfg, shape)
+        b_sh = _batch_shardings(batch, shape, mesh)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return BuiltStep(
+            fn=step_fn,
+            args=(params, opt_state, step, batch),
+            in_shardings=(p_sh, o_sh, NamedSharding(mesh, P()), b_sh),
+            donate=(0, 1),
+            meta={"cfg": cfg})
+
+    if shape.kind == "prefill":
+        clen = cache_len_for(cfg, shape.seq_len)
+        fn = make_prefill_step(cfg, clen, mesh=mesh, data_axes=data_axes)
+        batch = _batch_struct(cfg, shape)
+        b_sh = _batch_shardings(batch, shape, mesh)
+        return BuiltStep(fn=fn, args=(params, batch),
+                         in_shardings=(p_sh, b_sh), meta={"cfg": cfg})
+
+    # decode: one token against a seq_len cache
+    clen = cache_len_for(cfg, shape.seq_len)
+    fn = make_decode_step(cfg, mesh=mesh, data_axes=data_axes)
+    caches = cache_specs(cfg, shape.global_batch, clen, params)
+    c_sh = cache_shardings(caches, shape.global_batch, mesh)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_sh = NamedSharding(mesh, P(*batch_spec(shape.global_batch, mesh), None))
+    return BuiltStep(fn=fn, args=(params, token, caches),
+                     in_shardings=(p_sh, t_sh, c_sh), donate=(2,),
+                     meta={"cfg": cfg})
+
+
+def build_embedding_step(arch_cfg, shape: InputShape, mesh) -> BuiltStep:
+    """The paper's own arch: one hybrid-parallel training episode.
+
+    Shape mapping: `seq_len` has no direct analogue; the episode trains
+    `block_cap` samples per (round x sub-part) cell. Decode/prefill kinds map
+    to inference-style *embedding lookup serving* (gather + dot scoring)."""
+    from repro.core.hybrid import HybridConfig, build_episode_fn
+    from repro.core.partition import NodePartition
+
+    dims = tuple(mesh.devices.shape)
+    P_dev = int(np.prod(dims))
+    hcfg = HybridConfig(dim=arch_cfg.dim, negatives=arch_cfg.negatives,
+                        minibatch=arch_cfg.minibatch,
+                        subparts=arch_cfg.subparts,
+                        neg_pool=arch_cfg.neg_pool, lr=arch_cfg.lr,
+                        dtype=getattr(arch_cfg, "dtype", "float32"))
+    part = NodePartition(arch_cfg.num_nodes, dims=dims,
+                         subparts=arch_cfg.subparts)
+    fn, sh = build_episode_fn(mesh, part, hcfg)
+    # abstract inputs
+    d = arch_cfg.dim
+    N = part.padded_num_nodes
+    bcap = arch_cfg.block_cap
+    f32 = jnp.float32
+    tdt = jnp.dtype(hcfg.dtype)
+    args = (
+        jax.ShapeDtypeStruct((N, d), tdt),                       # vert
+        jax.ShapeDtypeStruct((N, d), tdt),                       # ctx
+        jax.ShapeDtypeStruct((P_dev, *dims, hcfg.subparts, bcap, 2),
+                             jnp.int32),                         # blocks
+        jax.ShapeDtypeStruct((P_dev, *dims, hcfg.subparts), jnp.int32),
+        jax.ShapeDtypeStruct((P_dev, hcfg.neg_pool), jnp.int32),  # pool
+        jax.ShapeDtypeStruct((1,), jnp.int32),                   # seed
+        jax.ShapeDtypeStruct((), f32),                           # lr
+    )
+    in_sh = (sh["table"], sh["table"], sh["blocks"], sh["blocks"],
+             sh["blocks"], sh["replicated"], sh["replicated"])
+    # the episode fn is already shard_map+jit; expose the underlying callable
+    return BuiltStep(fn=fn, args=args, in_shardings=in_sh, donate=(0, 1),
+                     meta={"embedding": True, "samples":
+                           P_dev * P_dev * hcfg.subparts * bcap})
+
+
+def build_step(arch: str, shape_name: str, mesh) -> BuiltStep:
+    shape = cfgs.SHAPES[shape_name]
+    cfg = cfgs.get_config(arch)
+    if getattr(cfg, "arch_type", None) == "embedding":
+        return build_embedding_step(cfg, shape, mesh)
+    return build_lm_step(cfg, shape, mesh)

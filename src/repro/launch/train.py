@@ -1,0 +1,181 @@
+"""Production training launcher.
+
+Two modes, selected by --arch:
+
+* ``tencent-embedding`` — the paper's system: decoupled walk engine (async,
+  one epoch ahead), episode pipeline, hybrid model-data parallel episode
+  step, periodic checkpoints, link-prediction eval.
+* any LM arch id — config-system LM training on the synthetic token
+  pipeline with the same sharding rules as the production dry-run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tencent-embedding \
+        --epochs 10 --nodes 20000
+    PYTHONPATH=src python -m repro.launch.train --arch phi3.5-moe-42b-a6.6b \
+        --reduced --steps 100
+
+Scale note: full (non-``--reduced``) LM configs need the real pod — on this
+container they are exercised via ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+
+def train_embedding(args):
+    import jax
+    from repro.configs.tencent_embedding import SMALL
+    from repro.core import (EpisodePipeline, HybridConfig,
+                            HybridEmbeddingTrainer, build_episode_blocks)
+    from repro.core import eval as ev
+    from repro.graph.csr import build_csr
+    from repro.graph.generators import powerlaw_graph
+    from repro.train.checkpoint import save_checkpoint
+    from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+    if args.graph:
+        from repro.graph.io import load_edge_list
+        g_full = load_edge_list(args.graph)
+    else:
+        g_full = powerlaw_graph(args.nodes, 5, seed=args.seed)
+    train_e, test_e = ev.split_edges(g_full, 0.03, seed=args.seed)
+    g = build_csr(train_e, g_full.num_nodes, symmetrize=False, dedup=False)
+    neg_e = ev.sample_negative_pairs(g_full, len(test_e), seed=args.seed + 1)
+    print(f"graph: {g.num_nodes} nodes / {g.num_edges} train edges; "
+          f"{len(test_e)} held out")
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    cfg = HybridConfig(dim=args.dim, minibatch=SMALL.minibatch,
+                       negatives=SMALL.negatives, subparts=args.subparts,
+                       neg_pool=SMALL.neg_pool, lr=args.lr, seed=args.seed)
+    trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                     degrees=g.degrees())
+    trainer.init_embeddings()
+    store = MemorySampleStore()
+    wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes,
+                      seed=args.seed)
+    pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    engine = WalkEngine(g, wcfg, store)
+    engine.start_async(0)
+    for epoch in range(args.epochs):
+        engine.join()
+        if epoch + 1 < args.epochs:  # paper: walks for e+1 overlap training e
+            nxt = WalkEngine(g, wcfg, store)
+            nxt.start_async(epoch + 1)
+        t0 = time.perf_counter()
+        pipe.prefetch(epoch, 0)
+        losses = []
+        for ep in range(args.episodes):
+            eb = pipe.get(epoch, ep)
+            if ep + 1 < args.episodes:
+                pipe.prefetch(epoch, ep + 1)
+            losses.append(trainer.train_episode(
+                eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+        store.drop_epoch(epoch)
+        V = trainer.embeddings()
+        Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
+        auc = ev.auc_score(
+            np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
+            np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
+        print(f"epoch {epoch:3d} loss {np.mean(losses):.4f} AUC {auc:.4f} "
+              f"({time.perf_counter()-t0:.1f}s)")
+        if epoch + 1 < args.epochs:
+            engine = nxt
+        if (epoch + 1) % args.ckpt_every == 0 or epoch + 1 == args.epochs:
+            path = os.path.join(args.out_dir, f"embeddings_{epoch+1}.npz")
+            save_checkpoint(path, {"vertex": V,
+                                   "context": trainer.context_embeddings()},
+                            step=epoch + 1)
+            print(f"  checkpoint -> {path}")
+    pipe.close()
+
+
+def train_lm(args):
+    import jax
+    import jax.numpy as jnp
+    from repro import configs as cfgs
+    from repro.data.tokens import TokenPipeline
+    from repro.launch.mesh import data_axes_of, make_host_mesh
+    from repro.models import transformer as tfm
+    from repro.models.common import count_params
+    from repro.sharding.specs import param_shardings
+    from repro.train.checkpoint import save_checkpoint
+    from repro.train.train_step import make_train_step
+
+    cfg = cfgs.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(layers=args.layers, d_model=args.d_model, experts=4)
+        cfg = dataclasses.replace(
+            cfg, vocab_size=min(cfg.vocab_size, 8192), train_microbatches=1)
+    params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    print(f"{args.arch}: {count_params(params)/1e6:.1f}M params")
+
+    mesh = make_host_mesh()
+    data_axes = data_axes_of(mesh)
+    params = jax.device_put(params, param_shardings(params, mesh))
+    step_fn, opt = make_train_step(cfg, mesh=mesh, data_axes=data_axes,
+                                   lr=args.lr)
+    opt_state = jax.device_put(
+        opt.init(params),
+        param_shardings(jax.eval_shape(opt.init, params), mesh))
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    pipe = TokenPipeline(cfg, args.batch, args.seq, seed=args.seed)
+    os.makedirs(args.out_dir, exist_ok=True)
+    with mesh:
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+            batch.setdefault("positions", jnp.broadcast_to(
+                jnp.arange(args.seq, dtype=jnp.int32),
+                batch["tokens"].shape))
+            params, opt_state, m = jit_step(params, opt_state,
+                                            jnp.int32(step), batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                      f"grad_norm {float(m['grad_norm']):.2f}")
+        if args.save:
+            save_checkpoint(os.path.join(args.out_dir, "lm_final.npz"),
+                            params, step=args.steps)
+    pipe.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tencent-embedding")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="/tmp/repro_train")
+    ap.add_argument("--lr", type=float, default=None)
+    # embedding mode
+    ap.add_argument("--graph", default=None, help="edge-list file (.npy/.txt)")
+    ap.add_argument("--nodes", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=96)
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--episodes", type=int, default=4)
+    ap.add_argument("--subparts", type=int, default=4)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    # lm mode
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--save", action="store_true")
+    args = ap.parse_args()
+    if args.arch == "tencent-embedding":
+        args.lr = args.lr if args.lr is not None else 0.025
+        train_embedding(args)
+    else:
+        args.lr = args.lr if args.lr is not None else 3e-4
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

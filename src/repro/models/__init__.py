@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models import transformer, attention, mamba, mlp, common
+
+__all__ = ["ModelConfig", "transformer", "attention", "mamba", "mlp", "common"]

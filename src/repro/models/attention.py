@@ -1,0 +1,463 @@
+"""Attention layers: GQA (opt. QKV bias), MLA (DeepSeek), sliding-window,
+cross-attention, with chunked-query training/prefill and ring-buffer KV-cache
+decode (absorbed-MLA decode over the compressed cache).
+
+All functions are stateless: ``params`` are plain dicts of arrays.
+Shapes: x (B, S, d); caches are dicts with a scalar position counter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import apply_rope, dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+UNC = jax.sharding.PartitionSpec.UNCONSTRAINED
+
+
+def _constrain_heads(x, cfg: ModelConfig, head_axis: int = 2,
+                     role: str = "q"):
+    """Pin the heads dim of (B, S, H, hd) activations to the "model" axis.
+
+    Without this, the MLA nope/rope split-and-concat (and the GQA grouped
+    reshape) break GSPMD's sharding propagation: it all-gathers Q over
+    "model" and computes attention with the *contracting* head_dim sharded,
+    psumming full score tensors (§Perf hillclimb B.1).
+
+    When the head count does not divide the "model" axis (qwen1.5-4b: 20H,
+    qwen2.5-32b: 40H on a 16-wide axis) we fall back to **sequence
+    parallelism**: q's sequence dim is sharded and the (small, GQA) k/v are
+    all-gathered — otherwise GSPMD replicates attention and materializes
+    full (B,H,S,S) score tensors per device (§Perf hillclimb C.1)."""
+    del role
+    tp = cfg.tp_size
+    if tp <= 1 or x.ndim <= head_axis or x.shape[head_axis] % tp != 0:
+        return x
+    spec = [UNC] * x.ndim
+    spec[head_axis] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except Exception:   # no mesh in scope (single-device smoke tests)
+        return x
+
+
+def _use_seq_parallel(cfg: ModelConfig, H: int, S: int, mesh) -> bool:
+    tp = cfg.tp_size
+    return (mesh is not None and tp > 1 and H % tp != 0 and S % tp == 0
+            and S > tp)
+
+
+def _seq_parallel_attention(q, k, v, positions, kv_pos, cfg: ModelConfig,
+                            mesh, chunk_attn, q_chunk: int):
+    """shard_map island: q sharded on its sequence dim over "model", k/v
+    replicated over "model" (kept sharded over the batch axes). Each device
+    runs plain chunked attention on its query slice — no score psums, no
+    (B,H,S,S) replication (§Perf hillclimb C.1)."""
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    B = q.shape[0]
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    b_axes: tuple = ()
+    for kk in range(len(data_axes), 0, -1):
+        n = int(np.prod([mesh.shape[a] for a in data_axes[:kk]]))
+        if B % n == 0 and n > 1:
+            b_axes = data_axes[:kk]
+            break
+    bspec = b_axes or None
+
+    def body(q, k, v, positions, kv_pos):
+        b, Sl = q.shape[0], q.shape[1]
+
+        def attn(qc, qpos):
+            return chunk_attn(qc, qpos, k, v, kv_pos)
+
+        if Sl <= q_chunk:
+            return attn(q, positions)
+        nq = -(-Sl // q_chunk)
+        pad = nq * q_chunk - Sl
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pp = jnp.pad(positions, ((0, 0), (0, pad)))
+        qp = qp.reshape(b, nq, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+        pp = pp.reshape(b, nq, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(lambda t: attn(*t), (qp, pp))
+        return out.swapaxes(0, 1).reshape(b, nq * q_chunk,
+                                          *out.shape[3:])[:, :Sl]
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None), P(bspec, None, None, None),
+                  P(bspec, None, None, None), P(bspec, "model"),
+                  P(bspec, None)),
+        out_specs=P(bspec, "model", None, None),
+        check_vma=False)(q, k, v, positions, kv_pos)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def init_attention_params(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d = cfg.d_model
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    if cfg.mla and not cross:
+        p = {
+            "wdq": dense_init(ks[0], (d, cfg.q_lora_rank), dtype=dt),
+            "q_norm": jnp.ones((cfg.q_lora_rank,), dt),
+            "wuq": dense_init(ks[1], (cfg.q_lora_rank, H,
+                                      cfg.qk_nope_head_dim + cfg.qk_rope_head_dim),
+                              in_axis=0, dtype=dt),
+            "wdkv": dense_init(ks[2], (d, cfg.kv_lora_rank), dtype=dt),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dt),
+            "wkr": dense_init(ks[3], (d, cfg.qk_rope_head_dim), dtype=dt),
+            "wuk": dense_init(ks[4], (cfg.kv_lora_rank, H, cfg.qk_nope_head_dim),
+                              in_axis=0, dtype=dt),
+            "wuv": dense_init(ks[5], (cfg.kv_lora_rank, H, cfg.v_head_dim),
+                              in_axis=0, dtype=dt),
+            "wo": dense_init(ks[6], (H, cfg.v_head_dim, d), in_axis=1, dtype=dt),
+        }
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, Hkv, hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, Hkv, hd), dtype=dt),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis=1, dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# core attention math (q against k/v with mask), grouped heads
+# --------------------------------------------------------------------------
+def _gqa_scores_combine(q, k, v, mask):
+    """q: (B,Sq,H,hd) k/v: (B,Skv,Hkv,hd) mask: (B,1,Sq,Skv) bool."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attention_forward(params, x, cfg: ModelConfig, *, positions=None,
+                      q_chunk: int = 1024, enc_out=None,
+                      mesh=None) -> jax.Array:
+    """Full-sequence attention (training / whole-seq prefill).
+
+    Causal with optional sliding window; if ``enc_out`` is given this is
+    cross-attention (no causal mask, kv from encoder output).
+    """
+    B, S, d = x.shape
+    cross = enc_out is not None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if cfg.mla and not cross:
+        q, k, v = _mla_qkv(params, x, positions, cfg)
+        q = _constrain_heads(q, cfg)
+        k = _constrain_heads(k, cfg)
+        v = _constrain_heads(v, cfg)
+    else:
+        src = enc_out if cross else x
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        if "bq" in params:
+            q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+        if not cross:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        q = _constrain_heads(q, cfg)
+        k = _constrain_heads(k, cfg)
+        v = _constrain_heads(v, cfg)
+
+    Skv = k.shape[1]
+    kv_pos = positions if not cross else jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    out = _attend(q, k, v, positions, kv_pos, cfg, mesh=mesh,
+                  q_chunk=q_chunk, cross=cross)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+
+
+def _attend(q, k, v, positions, kv_pos, cfg: ModelConfig, *, mesh=None,
+            q_chunk: int = 1024, cross: bool = False):
+    """Chunked-query attention of q against (k, v) with position-derived
+    masking. kv entries with kv_pos < 0 are invalid (ring-buffer slots).
+    Dispatches to the sequence-parallel shard_map island when heads do not
+    divide the "model" axis (§Perf C.1)."""
+    B, S = q.shape[0], q.shape[1]
+
+    def chunk_attn_kv(qc, qpos, k, v, kv_pos):
+        # qc: (b, Sq, H, hd); qpos: (b, Sq)
+        if cross:
+            mask = jnp.ones((qc.shape[0], 1, qc.shape[1], k.shape[1]), bool)
+        else:
+            mask = (kv_pos[:, None, None, :] >= 0) & \
+                (qpos[:, None, :, None] >= kv_pos[:, None, None, :])
+            if cfg.sliding_window:
+                mask &= (qpos[:, None, :, None] - kv_pos[:, None, None, :]
+                         < cfg.sliding_window)
+        return _gqa_scores_combine(qc, k, v, mask)
+
+    if _use_seq_parallel(cfg, q.shape[2], S, mesh) and not cross:
+        return _seq_parallel_attention(q, k, v, positions, kv_pos, cfg, mesh,
+                                       chunk_attn_kv, q_chunk)
+    if S <= q_chunk:
+        return chunk_attn_kv(q, positions, k, v, kv_pos)
+    nq = -(-S // q_chunk)
+    pad = nq * q_chunk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pp = jnp.pad(positions, ((0, 0), (0, pad)))
+    qp = qp.reshape(B, nq, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    pp = pp.reshape(B, nq, q_chunk).swapaxes(0, 1)
+    out = jax.lax.map(lambda t: chunk_attn_kv(t[0], t[1], k, v, kv_pos),
+                      (qp, pp))
+    return out.swapaxes(0, 1).reshape(B, nq * q_chunk, *out.shape[3:])[:, :S]
+
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig):
+    """MLA projections for full-sequence mode (uncompressed k/v)."""
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wdq"]),
+                  params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"])
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wdkv"]),
+                   params["kv_norm"], cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["wuv"])
+    k_rope = apply_rope(jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, :, None, :],
+                        positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (*k_nope.shape[:3], cfg.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # pad v's head_dim up to qk dim so GQA combine works uniformly
+    return q_full, k_full, v
+
+
+def attention_extend(params, x, cache: dict, cfg: ModelConfig,
+                     *, mesh=None):
+    """Chunked-prefill step: process S_c tokens attending to the cache plus
+    themselves (causal), then write them into the ring buffer.
+
+    Returns (out (B,S_c,d), cache). MLA uses the expanded cache here (the
+    absorbed path is decode-only); GQA attends to ring k/v directly.
+    """
+    B, Sc, _ = x.shape
+    t = cache["t"]
+    W = cache["pos"].shape[1]
+    positions = t + jnp.broadcast_to(jnp.arange(Sc), (B, Sc))
+
+    if cfg.mla:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wdq"]),
+                      params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"])
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wdkv"]),
+                       params["kv_norm"], cfg.norm_eps)
+        kr = apply_rope(jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0, :]
+        cache = _ring_write(cache, {"ckv": ckv, "kr": kr}, positions)
+        # expand compressed cache to k/v for chunk scoring
+        k_nope = jnp.einsum("bwr,rhk->bwhk", cache["ckv"].astype(x.dtype),
+                            params["wuk"])
+        kr_c = jnp.broadcast_to(cache["kr"][:, :, None, :],
+                                (*k_nope.shape[:3], cfg.qk_rope_head_dim)
+                                ).astype(x.dtype)
+        k = jnp.concatenate([k_nope, kr_c], axis=-1)
+        v = jnp.einsum("bwr,rhk->bwhk", cache["ckv"].astype(x.dtype),
+                       params["wuv"])
+        q_for_attn = q_full
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k1 = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v1 = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if "bq" in params:
+            q, k1, v1 = q + params["bq"], k1 + params["bk"], v1 + params["bv"]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k1 = apply_rope(k1, positions, cfg.rope_theta)
+        cache = _ring_write(cache, {"k": k1, "v": v1}, positions)
+        k, v = cache["k"], cache["v"]
+        q_for_attn = q
+
+    out = _attend(q_for_attn, k, v, positions, cache["pos"], cfg,
+                  mesh=mesh, q_chunk=1024)
+    cache["t"] = t + Sc
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"]), cache
+
+
+def cross_kv(params, enc_out):
+    """Precompute cross-attention k/v from encoder output (cached once)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    if "bk" in params:
+        k, v = k + params["bk"], v + params["bv"]
+    return k, v
+
+
+def _ring_write(cache: dict, new: dict, positions):
+    """Write S_c new entries at positions%W (assumes S_c <= W or takes the
+    last W)."""
+    B = positions.shape[0]
+    W = cache["pos"].shape[1]
+    take = min(positions.shape[1], W)
+    slots = positions[:, -take:] % W
+    bidx = jnp.arange(B)[:, None]
+    for name, val in new.items():
+        cache[name] = cache[name].at[bidx, slots].set(
+            val[:, -take:].astype(cache[name].dtype))
+    cache["pos"] = cache["pos"].at[bidx, slots].set(positions[:, -take:])
+    return cache
+
+
+# --------------------------------------------------------------------------
+# decode with ring-buffer cache
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, length: int, *, cross_len: int = 0):
+    """Ring-buffer cache. `length` = window size for sliding-window decode or
+    full context length. Positions initialised to -1 (invalid)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    W = min(length, cfg.sliding_window) if cfg.sliding_window else length
+    if cfg.mla:
+        cache = {
+            "ckv": jnp.zeros((batch, W, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((batch, W, cfg.qk_rope_head_dim), dt),
+        }
+    else:
+        Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "k": jnp.zeros((batch, W, Hkv, hd), dt),
+            "v": jnp.zeros((batch, W, Hkv, hd), dt),
+        }
+    cache["pos"] = jnp.full((batch, W), -1, jnp.int32)
+    cache["t"] = jnp.zeros((), jnp.int32)
+    if cross_len:
+        cache["enc_k"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                                    cfg.resolved_head_dim), dt)
+        cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+    return cache
+
+
+def fill_cache(params, cache: dict, tokens_x: jax.Array, cfg: ModelConfig,
+               start: int = 0):
+    """Prefill: run full-seq projections and write the last W entries into the
+    ring buffer (used by serve prefill)."""
+    B, S, _ = tokens_x.shape
+    positions = start + jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.mla:
+        ckv = rms_norm(jnp.einsum("bsd,dr->bsr", tokens_x, params["wdkv"]),
+                       params["kv_norm"], cfg.norm_eps)
+        kr = apply_rope(jnp.einsum("bsd,dk->bsk", tokens_x,
+                                   params["wkr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+        new = {"ckv": ckv, "kr": kr}
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", tokens_x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", tokens_x, params["wv"])
+        if "bk" in params:
+            k, v = k + params["bk"], v + params["bv"]
+        k = apply_rope(k, positions, cfg.rope_theta)
+        new = {"k": k, "v": v}
+    W = cache["pos"].shape[1]
+    take = min(S, W)
+    slots = (positions[:, -take:]) % W
+    for name, val in new.items():
+        cache[name] = cache[name].at[jnp.arange(B)[:, None], slots].set(
+            val[:, -take:].astype(cache[name].dtype))
+    cache["pos"] = cache["pos"].at[jnp.arange(B)[:, None], slots].set(
+        positions[:, -take:])
+    cache["t"] = jnp.asarray(start + S, jnp.int32)
+    return cache
+
+
+def attention_decode(params, x1, cache: dict, cfg: ModelConfig, *,
+                     cross: bool = False):
+    """One-token decode. x1: (B, 1, d). Returns (out (B,1,d), new cache).
+
+    GQA: ring-buffer k/v attention. MLA: absorbed decode — scores and values
+    are computed against the *compressed* ckv cache (never expanding k/v),
+    which is the reason MLA's cache is small.
+    """
+    B = x1.shape[0]
+    t = cache["t"]
+    W = cache["pos"].shape[1]
+    pos1 = jnp.broadcast_to(t[None, None], (B, 1))
+
+    if cross:
+        k, v = cache["enc_k"], cache["enc_v"]
+        q = jnp.einsum("bsd,dhk->bshk", x1, params["wq"])
+        if "bq" in params:
+            q = q + params["bq"]
+        mask = jnp.ones((B, 1, q.shape[1], k.shape[1]), bool)
+        out = _gqa_scores_combine(q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out.astype(x1.dtype), params["wo"]), cache
+
+    slot = (t % W).astype(jnp.int32)
+    valid = cache["pos"] >= 0                                  # (B, W)
+    if cfg.sliding_window:
+        valid &= (t - cache["pos"]) < cfg.sliding_window
+
+    if cfg.mla:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x1, params["wdq"]),
+                      params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"])
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+        q_rope = apply_rope(q_rope, pos1, cfg.rope_theta)
+        ckv1 = rms_norm(jnp.einsum("bsd,dr->bsr", x1, params["wdkv"]),
+                        params["kv_norm"], cfg.norm_eps)
+        kr1 = apply_rope(jnp.einsum("bsd,dk->bsk", x1,
+                                    params["wkr"])[:, :, None, :], pos1,
+                         cfg.rope_theta)[:, :, 0, :]
+        cache["ckv"] = cache["ckv"].at[:, slot].set(ckv1[:, 0].astype(cache["ckv"].dtype))
+        cache["kr"] = cache["kr"].at[:, slot].set(kr1[:, 0].astype(cache["kr"].dtype))
+        cache["pos"] = cache["pos"].at[:, slot].set(t)
+        valid = cache["pos"] >= 0
+        if cfg.sliding_window:
+            valid &= (t - cache["pos"]) < cfg.sliding_window
+        # absorbed scores: q_nope^T Wuk^T ckv  +  q_rope^T kr
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                           params["wuk"].astype(jnp.float32))     # (B,1,H,r)
+        sc = (jnp.einsum("bshr,bwr->bhw", q_abs,
+                         cache["ckv"].astype(jnp.float32))
+              + jnp.einsum("bshk,bwk->bhw", q_rope.astype(jnp.float32),
+                           cache["kr"].astype(jnp.float32)))
+        sc = sc / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)                           # (B,H,W)
+        ctx = jnp.einsum("bhw,bwr->bhr", p, cache["ckv"].astype(jnp.float32))
+        out = jnp.einsum("bhr,rhk->bhk", ctx, params["wuv"].astype(jnp.float32))
+        out = out[:, None]                                        # (B,1,H,vd)
+        cache["t"] = t + 1
+        return jnp.einsum("bshk,hkd->bsd", out.astype(x1.dtype), params["wo"]), cache
+
+    q = jnp.einsum("bsd,dhk->bshk", x1, params["wq"])
+    k1 = jnp.einsum("bsd,dhk->bshk", x1, params["wk"])
+    v1 = jnp.einsum("bsd,dhk->bshk", x1, params["wv"])
+    if "bq" in params:
+        q, k1, v1 = q + params["bq"], k1 + params["bk"], v1 + params["bv"]
+    q = apply_rope(q, pos1, cfg.rope_theta)
+    k1 = apply_rope(k1, pos1, cfg.rope_theta)
+    cache["k"] = cache["k"].at[:, slot].set(k1[:, 0].astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, slot].set(v1[:, 0].astype(cache["v"].dtype))
+    cache["pos"] = cache["pos"].at[:, slot].set(t)
+    valid = cache["pos"] >= 0
+    if cfg.sliding_window:
+        valid &= (t - cache["pos"]) < cfg.sliding_window
+    out = _gqa_scores_combine(q, cache["k"], cache["v"], valid[:, None, None, :])
+    cache["t"] = t + 1
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x1.dtype), params["wo"]), cache

@@ -1,0 +1,191 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: within-chunk attention-like term via the 1-semiseparable mask,
+across-chunk recurrence on the (H, P, N) state carried by a `lax.scan`. The
+decode path is the O(1) recurrent update on the same state — this is what
+makes `long_500k` trivial for SSM archs.
+
+Jamba's Mamba-1 (S6) layers are implemented with the same machinery:
+SSD with scalar-per-head A generalizes the S6 recurrence (the "duality" of
+the paper's title); DESIGN.md records this hardware adaptation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+
+def init_mamba_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di + 2 * N), dtype=dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),     # softplus ≈ 0.12
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), in_axis=0, dtype=dt),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (j<i)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, init_state=None):
+    """SSD scan. x: (b,S,H,P), dt: (b,S,H) (post-softplus), A: (H,) (<0),
+    B/C: (b,S,N). Returns (y (b,S,H,P), final_state (b,H,P,N))."""
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    xc = x.reshape(b, nc, chunk, H, Pd)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                     # (b,nc,l,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                        # inclusive
+    # ---- within-chunk (diagonal) term ----
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (b,nc,H,l,l)
+    G = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)             # (b,nc,l,s)
+    M = G[:, :, None] * L                                 # (b,nc,H,l,s)
+    y_diag = jnp.einsum("bchls,bcsh,bcshp->bclhp", M, dtc, xc)
+
+    # ---- chunk states ----
+    decay_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,nc,l,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_end * dtc, xc)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (b,nc,H)
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                     # (b,H,P,N), (b,H)
+        new = st + dec[..., None, None] * prev
+        return new, prev                                  # emit state BEFORE chunk
+
+    init = (jnp.zeros((b, H, Pd, N), x.dtype) if init_state is None
+            else init_state.astype(x.dtype))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,H,P,N)
+
+    # ---- off-diagonal (carried state) term ----
+    state_decay = jnp.exp(dA_cs)                          # (b,nc,l,H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, Sp, H, Pd)[:, :S]
+    return y, final
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *, init_state=None,
+                  conv_init=None, return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d).
+
+    ``init_state``/``conv_init`` continue a previous chunk (chunked prefill);
+    with ``return_state`` the updated (ssm state, conv tail) are returned.
+    """
+    di, H, N = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_state
+    Pd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    hist = (conv_init if conv_init is not None else
+            jnp.zeros((xbc.shape[0], cfg.ssm_conv - 1, xbc.shape[-1]), xbc.dtype))
+    conv_tail = jnp.concatenate([hist.astype(xbc.dtype), xbc],
+                                axis=1)[:, -(cfg.ssm_conv - 1):]
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], history=hist)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = jax.nn.silu(xs)
+    Bm, Cm = jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(*xs.shape[:2], H, Pd)
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           chunk=cfg.ssm_chunk, init_state=init_state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(*xs.shape[:2], di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        return out, state, conv_tail
+    return out
+
+
+def _causal_conv(x, w, b, history=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). ``history``: (B,K-1,C)
+    inputs preceding x (zeros when None)."""
+    K = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+# --------------------------------------------------------------------------
+# decode: O(1) recurrent step
+# --------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner_ssm + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(params, x1, cache, cfg: ModelConfig):
+    """One-token step. x1: (B,1,d)."""
+    di, H, N, Pd = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x1, params["in_proj"])[:, 0]
+    z, xs, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)            # (B, C)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
+    cache["conv"] = hist[:, 1:]
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xs = jax.nn.silu(xs)
+    Bm, Cm = jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                           # (B,H)
+    xh = xs.reshape(-1, H, Pd).astype(jnp.float32)
+    st = cache["state"]
+    st = st * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    cache["state"] = st
+    y = jnp.einsum("bhpn,bn->bhp", st, Cm.astype(jnp.float32))
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(-1, di).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None], cache

@@ -1,0 +1,269 @@
+"""FFN layers: gated dense MLP and expert-parallel MoE.
+
+The MoE layer is the architecture-pool feature closest to the paper's
+technique: like the paper's 2D-partitioned embedding blocks, tokens are
+data-parallel while the expert weights are model-parallel, and the exchange
+that pairs them is an explicit collective (all-to-all here, ring ppermute in
+the paper). It is implemented as a `shard_map` island over the ``"model"``
+axis with capacity-based dispatch:
+
+  1. split the local sequence over "model" (token slicing),
+  2. route: top-k over router logits,
+  3. bucket tokens by destination shard (rank-via-cumsum), pad to capacity,
+  4. `all_to_all` over "model",
+  5. bucket received tokens by local expert, batched expert matmuls (MXU),
+  6. reverse `all_to_all`, weighted combine.
+
+Overflowing tokens are dropped (standard capacity semantics); the router's
+load-balance auxiliary loss (Switch-style) keeps drops rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# dense gated FFN
+# --------------------------------------------------------------------------
+def init_ffn_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), in_axis=0, dtype=dtype),
+    }
+
+
+def ffn_forward(params, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+def init_moe_params(key, cfg: ModelConfig) -> dict:
+    d, E, ff = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, ff), dtype=dt),
+        "w_up": dense_init(ks[2], (E, d, ff), dtype=dt),
+        "w_down": dense_init(ks[3], (E, ff, d), in_axis=1, dtype=dt),
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = init_ffn_params(ks[4], d, cfg.moe_d_ff * cfg.moe_num_shared, dt)
+    return p
+
+
+def _rank_in_group(group_ids: jax.Array, num_groups: int) -> jax.Array:
+    """rank of each element within its group (stable, 0-based). (R,) int32."""
+    onehot = jax.nn.one_hot(group_ids, num_groups, dtype=jnp.int32)  # (R, G)
+    ranks = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(ranks, group_ids[:, None], axis=1)[:, 0]
+
+
+def moe_ref(params, x, cfg: ModelConfig):
+    """Dense oracle: every expert computes every token, gated combine.
+    Used by tests and by single-device smoke runs."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.moe_top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, params["w_gate"]))
+    h = h * jnp.einsum("bsd,edf->bsef", x, params["w_up"])
+    y_all = jnp.einsum("bsef,efd->bsed", h, params["w_down"])
+    # dense gate tensor from top-k
+    gates = jnp.zeros(probs.shape, jnp.float32)
+    b_idx = jnp.arange(probs.shape[0])[:, None, None]
+    s_idx = jnp.arange(probs.shape[1])[None, :, None]
+    gates = gates.at[b_idx, s_idx, topi].set(topw)
+    y = jnp.einsum("bsed,bse->bsd", y_all.astype(jnp.float32), gates)
+    aux = _aux_loss(probs, gates, cfg)
+    return y.astype(x.dtype), aux
+
+
+def _aux_loss(probs, gates, cfg: ModelConfig):
+    """Switch-style load balance: E * Σ_e f_e · p̄_e."""
+    E = cfg.moe_num_experts
+    frac = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1))  # (E,)
+    pbar = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(frac * pbar)
+
+
+def _device_moe(params, x, cfg: ModelConfig, ep_axes,
+                quota: int | None = None):
+    """Per-device body of the expert-parallel MoE (inside shard_map).
+
+    x: (B_loc, S_slice, d) — this device's token slice. If the sequence is
+    too short to slice over "model" (decode), x arrives replicated and
+    ``quota`` assigns each rank a disjoint token range instead.
+    params["w_*"]: (E_loc, ...) — this device's experts.
+    """
+    sizes = [jax.lax.axis_size(a) for a in ep_axes]
+    M = 1
+    for n in sizes:
+        M *= n
+    m_idx = jax.lax.axis_index(ep_axes[0])
+    for a in ep_axes[1:]:
+        m_idx = m_idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    E_loc = params["w_gate"].shape[0]
+    E = E_loc * M
+    k = cfg.moe_top_k
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                    # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    R = T * k
+    flat_e = topi.reshape(R)                                 # global expert ids
+    flat_w = topw.reshape(R)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    if quota is not None:
+        # replicated-token mode: rank m owns tokens [m*quota, (m+1)*quota)
+        mine = (flat_tok >= m_idx * quota) & (flat_tok < (m_idx + 1) * quota)
+        flat_e = jnp.where(mine, flat_e, E)  # E = invalid -> dropped
+
+    # ---- bucket by destination model shard, pad to send capacity ----
+    # floor of 8 (MXU sublane), NOT a large round number: with 256
+    # destinations a floor of 64 quadruples both the all-to-all payload and
+    # the expert matmul padding (Perf B.3)
+    dest = jnp.minimum(flat_e // E_loc, M)                   # (R,) M = drop
+    cap_send = max(8, int(-(-(quota * k if quota else R) // M)
+                          * cfg.moe_capacity_factor))
+    rank_d = _rank_in_group(dest, M + 1)   # spare group M = dropped rows
+    ok = (rank_d < cap_send) & (dest < M)
+    send_x = jnp.zeros((M, cap_send, d), x.dtype)
+    send_e = jnp.full((M, cap_send), -1, jnp.int32)          # local expert id
+    # mode="drop": overflowing ranks fall off the buffer instead of clipping
+    send_x = send_x.at[dest, rank_d].set(xt[flat_tok], mode="drop")
+    send_e = send_e.at[dest, rank_d].set(flat_e % E_loc, mode="drop")
+
+    recv_x = jax.lax.all_to_all(send_x, ep_axes, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, ep_axes, 0, 0, tiled=False)
+
+    # ---- bucket received rows by local expert ----
+    Rr = M * cap_send
+    re = recv_e.reshape(Rr)
+    rx = recv_x.reshape(Rr, d)
+    valid = re >= 0
+    re_safe = jnp.where(valid, re, 0)
+    # cap_send already carries the capacity factor; compounding it here
+    # would pad the expert matmuls by factor^2 (Perf B.3)
+    cap_e = max(8, -(-Rr // E_loc))
+    # rank within local expert; invalid rows are counted in their own spare
+    # group (E_loc) so they neither consume real capacity nor shift ranks
+    rank_e = _rank_in_group(jnp.where(valid, re, E_loc), E_loc + 1)
+    rank_e = jnp.where(valid, rank_e, cap_e)
+    ok_e = valid & (rank_e < cap_e)
+    buf = jnp.zeros((E_loc, cap_e, d), x.dtype)
+    buf = buf.at[jnp.where(ok_e, re_safe, E_loc), rank_e].set(rx, mode="drop")
+
+    # ---- batched expert matmuls (MXU) ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # ---- un-bucket, reverse all_to_all, combine ----
+    y_rows = jnp.where(
+        ok_e[:, None],
+        y_buf[re_safe, jnp.minimum(rank_e, cap_e - 1)],
+        0.0).reshape(M, cap_send, d)
+    back = jax.lax.all_to_all(y_rows, ep_axes, 0, 0, tiled=False)
+    # back[m, c] corresponds to send slot (m, c); scatter-add to tokens
+    y_tok = jnp.zeros((T, d), jnp.float32)
+    contrib = jnp.where(ok[:, None], back[dest, rank_d].astype(jnp.float32), 0.0)
+    y_tok = y_tok.at[flat_tok].add(contrib * flat_w[:, None])
+
+    gates = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], topi].set(topw)
+    aux = _aux_loss(probs[None], gates[None], cfg)
+    return y_tok.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_forward(params, x, cfg: ModelConfig, *, mesh=None,
+                data_axes=("data",), model_axis="model"):
+    """Expert-parallel MoE over the "model" axis (shard_map island).
+
+    Falls back to the dense oracle when no mesh is given (smoke tests)."""
+    if mesh is None or cfg.moe_num_experts <= 1:
+        return moe_ref(params, x, cfg)
+
+    model_size = mesh.shape[model_axis]
+    if cfg.moe_num_experts % model_size != 0:
+        return moe_ref(params, x, cfg)
+    # 2-D expert parallelism (§Perf B.2): when the expert count divides the
+    # WHOLE mesh (deepseek: 256 experts on 256 chips), shard experts over
+    # (data x model) jointly — expert weights become fully resident (no FSDP
+    # all-gathers) and the all-to-all spans both axes.
+    B, S = x.shape[0], x.shape[1]
+    # batch axes: as many slow axes as divide the (global) batch
+    b_axes: tuple = ()
+    for kk in range(len(data_axes), 0, -1):
+        n = int(np.prod([mesh.shape[a] for a in data_axes[:kk]]))
+        if B % n == 0 and n > 1:
+            b_axes = data_axes[:kk]
+            break
+    B_loc = B // int(np.prod([mesh.shape[a] for a in b_axes])) if b_axes else B
+
+    total = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if cfg.moe_num_experts % total == 0 and tuple(b_axes) == tuple(data_axes):
+        # tokens fully sharded across the data axes -> combined-axis EP is
+        # well-defined (every token has exactly one owner)
+        ep_axes = (*data_axes, model_axis)
+    else:
+        ep_axes = (model_axis,)
+    ep_size = int(np.prod([mesh.shape[a] for a in ep_axes]))
+    if S % model_size == 0:
+        quota = None
+        pspec_x = P(b_axes or None, model_axis, None)  # seq sliced over model
+    else:
+        # short sequences (decode): tokens replicated over "model"; each rank
+        # owns a disjoint quota of them, outputs psum-combined.
+        # quota mode: tokens are replicated over "model" only, so EP must
+        # stay model-axis-local (a combined-axis quota would mis-assign the
+        # data-sharded tokens)
+        ep_axes = (model_axis,)
+        ep_size = model_size
+        quota = max(1, -(-(B_loc * S) // ep_size))
+        pspec_x = P(b_axes or None, None, None)
+
+    def body(params, x):
+        y, aux = _device_moe(params, x, cfg, ep_axes, quota=quota)
+        if quota is not None:
+            y = jax.lax.psum(y, model_axis)
+        return y, jax.lax.pmean(aux, (*data_axes, model_axis))
+    ep_spec = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    pspec_params = {
+        "router": P(),
+        "w_gate": P(ep_spec, None, None),
+        "w_up": P(ep_spec, None, None),
+        "w_down": P(ep_spec, None, None),
+    }
+    if "shared" in params:
+        pspec_params["shared"] = {k: P() for k in params["shared"]}
+
+    shared_y = ffn_forward(params["shared"], x) if "shared" in params else None
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=({k: pspec_params[k] for k in params if k != "shared"},
+                  pspec_x),
+        out_specs=(pspec_x, P()),
+        check_vma=False,
+    )({k: v for k, v in params.items() if k != "shared"}, x)
+    if shared_y is not None:
+        y = y + shared_y
+    return y, aux

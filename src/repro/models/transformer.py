@@ -1,0 +1,430 @@
+"""Unified decoder / encoder-decoder stack covering all assigned archs.
+
+Layers are grouped into **segments** of identical structure; each segment is
+a `lax.scan` over stacked per-layer params (bounded HLO + compile time even
+for 61-64-layer archs), with the within-period slots unrolled:
+
+  * dense/moe/ssm archs: one segment, period 1;
+  * jamba: one segment, period 8 ("AMMMMMMM" mixers, MoE every 2nd layer);
+  * deepseek: two segments (3 dense layers, then 58 MoE layers).
+
+Three entry points:
+  * :func:`forward_train`    — full-seq forward + LM loss (+ MoE aux, MTP).
+  * :func:`prefill`          — chunked-prefill building decode caches.
+  * :func:`decode_step`      — one-token serve step against the caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import mamba as ssm
+from repro.models import mlp
+from repro.models.common import embed_init, rms_norm
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# segments
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    groups: int                      # scan length
+    sig: tuple                       # per-slot (ltype, is_moe)
+
+
+def segments_of(cfg: ModelConfig, num_layers: int | None = None,
+                layer_offset: int = 0) -> list[Segment]:
+    L = num_layers if num_layers is not None else cfg.num_layers
+    types = cfg.layer_types()
+    sigs = [(types[layer_offset + i], cfg.is_moe_layer(layer_offset + i))
+            for i in range(L)]
+    for p in range(1, min(16, L) + 1):
+        # p == L would be a full unroll; prefer run-splitting instead
+        if (p < L or L == 1) and L % p == 0 and \
+                all(sigs[i] == sigs[i % p] for i in range(L)):
+            return [Segment(groups=L // p, sig=tuple(sigs[:p]))]
+    # fall back to maximal constant runs (deepseek: 3 dense + 58 moe)
+    segs, i = [], 0
+    while i < L:
+        j = i
+        while j < L and sigs[j] == sigs[i]:
+            j += 1
+        segs.append(Segment(groups=j - i, sig=(sigs[i],)))
+        i = j
+    return segs
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_slot(key, ltype: str, is_moe: bool, cfg: ModelConfig,
+               cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if ltype == "A":
+        p["attn"] = attn.init_attention_params(ks[0], cfg)
+    else:
+        p["mixer"] = ssm.init_mamba_params(ks[0], cfg)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), dt)
+        p["cross"] = attn.init_attention_params(ks[1], cfg, cross=True)
+    if cfg.d_ff > 0 or is_moe:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        if is_moe:
+            p["moe"] = mlp.init_moe_params(ks[2], cfg)
+        else:
+            p["ffn"] = mlp.init_ffn_params(ks[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _init_segment(key, seg: Segment, cfg: ModelConfig, cross: bool) -> dict:
+    """Stacked params: tree with leading `groups` dim per slot."""
+    slots = []
+    for s, (ltype, is_moe) in enumerate(seg.sig):
+        gk = jax.random.split(jax.random.fold_in(key, s), seg.groups)
+        per_group = [_init_slot(gk[g], ltype, is_moe, cfg, cross)
+                     for g in range(seg.groups)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+    return {"slots": slots}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "segments": [
+            _init_segment(jax.random.fold_in(ks[1], i), seg, cfg,
+                          cross=cfg.is_encdec)
+            for i, seg in enumerate(segments_of(cfg))
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[2], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(cfg, mla=False)
+        params["enc_segments"] = [
+            _init_segment(jax.random.fold_in(ks[3], i), seg, enc_cfg,
+                          cross=False)
+            for i, seg in enumerate(segments_of(cfg, cfg.encoder_layers))
+        ]
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.mtp:
+        params["mtp_proj"] = embed_init(ks[4], (2 * cfg.d_model, cfg.d_model), dt)
+        params["mtp_layer"] = _init_slot(ks[5], "A", False, cfg)
+        params["mtp_norm"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer body
+# --------------------------------------------------------------------------
+def _layer_fwd(p, x, ltype, is_moe, cfg: ModelConfig, *, mesh=None,
+               data_axes=("data",), enc_out=None, cross=False,
+               positions=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if ltype == "A":
+        h = attn.attention_forward(p["attn"], h, cfg, mesh=mesh,
+                                   positions=positions)
+    else:
+        h = ssm.mamba_forward(p["mixer"], h, cfg)
+    x = x + h
+    if cross:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + attn.attention_forward(p["cross"], hx, cfg, enc_out=enc_out,
+                                       mesh=mesh)
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = mlp.moe_forward(p["moe"], h2, cfg, mesh=mesh,
+                                 data_axes=data_axes)
+        x = x + y
+    elif "ffn" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp.ffn_forward(p["ffn"], h2)
+    return x, aux
+
+
+def _run_segments(segments_params, segs, x, cfg: ModelConfig, *, mesh=None,
+                  data_axes=("data",), enc_out=None, cross=False,
+                  positions=None):
+    aux_total = jnp.float32(0.0)
+
+    for seg_p, seg in zip(segments_params, segs):
+        def body(carry, slot_params, seg=seg):
+            x, aux = carry
+            for s, (ltype, is_moe) in enumerate(seg.sig):
+                fwd = functools.partial(
+                    _layer_fwd, ltype=ltype, is_moe=is_moe, cfg=cfg,
+                    mesh=mesh, data_axes=data_axes, enc_out=enc_out,
+                    cross=cross, positions=positions)
+                if cfg.remat:
+                    fwd = jax.checkpoint(fwd)
+                x, a = fwd(slot_params[s], x)
+                aux = aux + a
+            return (x, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), seg_p["slots"])
+    return x, aux_total
+
+
+# --------------------------------------------------------------------------
+# embedding / heads (vocab-sharded; the paper-technique tie-in)
+# --------------------------------------------------------------------------
+def _embed_tokens(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _lm_logits(params, x, cfg: ModelConfig):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+
+
+def softmax_xent(logits, labels, mask):
+    """logits (B,S,V) f32, labels (B,S) int32, mask (B,S)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+def _encoder_forward(params, frames, cfg: ModelConfig, *, mesh=None,
+                     data_axes=("data",)):
+    segs = segments_of(cfg, cfg.encoder_layers)
+    x, aux = _run_segments(params["enc_segments"], segs, frames, cfg,
+                           mesh=mesh, data_axes=data_axes)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps), aux
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig, *, mesh=None,
+                  data_axes=("data",)):
+    """Returns (loss, metrics). batch keys:
+      tokens (B,S) int32 [all archs];
+      patch_embeds (B,P,d) [vlm: prepended to the token stream];
+      frames (B,Se,d) [audio enc-dec: encoder input].
+    Loss: next-token xent on the token positions (+0.01*aux +0.3*mtp)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    enc_out, aux_enc, prefix = None, 0.0, 0
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix = pe.shape[1]
+    if cfg.is_encdec:
+        enc_out, aux_enc = _encoder_forward(
+            params, batch["frames"].astype(x.dtype), cfg, mesh=mesh,
+            data_axes=data_axes)
+
+    segs = segments_of(cfg)
+    # runtime positions (when the batch provides them) keep the causal masks
+    # out of XLA's constant/"wide" hoisting — EXPERIMENTS.md §Perf "runtime
+    # positions". Prefix (VLM) streams extend them on the left.
+    positions = batch.get("positions")
+    if positions is not None and x.shape[1] != positions.shape[1]:
+        pre = x.shape[1] - positions.shape[1]
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(pre), (x.shape[0], pre)),
+             positions + pre], axis=1)
+    x, aux = _run_segments(params["segments"], segs, x, cfg, mesh=mesh,
+                           data_axes=data_axes, enc_out=enc_out,
+                           cross=cfg.is_encdec, positions=positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    logits = _lm_logits(params, x, cfg)
+    logits = jax.lax.with_sharding_constraint(
+        logits, P(data_axes, None, "model")) if mesh is not None else logits
+    labels = tokens[:, 1:]
+    mask = batch.get("loss_mask", jnp.ones_like(tokens, jnp.float32))[:, 1:]
+    loss = softmax_xent(logits[:, :-1], labels, mask)
+    metrics = {"xent": loss, "aux": aux + aux_enc}
+    loss = loss + 0.01 * (aux + aux_enc)
+
+    if cfg.mtp:  # DeepSeek multi-token prediction: predict t+2 as well
+        h = x[:, :-2]
+        nxt = _embed_tokens(params, tokens[:, 1:-1], cfg)
+        hm = jnp.einsum("bsd,dk->bsk",
+                        jnp.concatenate([h, nxt], axis=-1).astype(x.dtype),
+                        params["mtp_proj"])
+        hm, _ = _layer_fwd(params["mtp_layer"], hm, "A", False, cfg,
+                           mesh=mesh, data_axes=data_axes)
+        hm = rms_norm(hm, params["mtp_norm"], cfg.norm_eps)
+        mtp_logits = _lm_logits(params, hm, cfg)
+        mtp_loss = softmax_xent(mtp_logits, tokens[:, 2:], mask[:, 1:])
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+def _layer_extend(p, x, cache, ltype, cfg: ModelConfig, *, mesh=None,
+                  data_axes=("data",), cross=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if ltype == "A":
+        h, cache = attn.attention_extend(p["attn"], h, cache, cfg, mesh=mesh)
+    else:
+        h, st, tail = ssm.mamba_forward(p["mixer"], h, cfg,
+                                        init_state=cache["state"],
+                                        conv_init=cache["conv"],
+                                        return_state=True)
+        cache = dict(cache, state=st, conv=tail.astype(cache["conv"].dtype))
+    x = x + h
+    if cross:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        cx, _ = attn.attention_decode(p["cross"], hx, cache, cfg, cross=True)
+        x = x + cx
+    if "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = mlp.moe_forward(p["moe"], h2, cfg, mesh=mesh,
+                               data_axes=data_axes)
+        x = x + y
+    elif "ffn" in p:
+        x = x + mlp.ffn_forward(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, cache
+
+
+def _layer_decode(p, x1, cache, ltype, cfg: ModelConfig, *, mesh=None,
+                  data_axes=("data",), cross=False):
+    h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+    if ltype == "A":
+        h, cache = attn.attention_decode(p["attn"], h, cache, cfg)
+    else:
+        h, cache = ssm.mamba_decode(p["mixer"], h, cache, cfg)
+    x1 = x1 + h
+    if cross:
+        hx = rms_norm(x1, p["ln_x"], cfg.norm_eps)
+        cx, _ = attn.attention_decode(p["cross"], hx, cache, cfg, cross=True)
+        x1 = x1 + cx
+    if "moe" in p:
+        h2 = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        y, _ = mlp.moe_forward(p["moe"], h2, cfg, mesh=mesh,
+                               data_axes=data_axes)
+        x1 = x1 + y
+    elif "ffn" in p:
+        x1 = x1 + mlp.ffn_forward(p["ffn"], rms_norm(x1, p["ln2"], cfg.norm_eps))
+    return x1, cache
+
+
+def init_caches(params, cfg: ModelConfig, batch: int, cache_len: int,
+                *, enc_out=None):
+    """Per-segment stacked caches matching the scan layout. For enc-dec,
+    per-layer cross k/v are projected from ``enc_out`` once and cached."""
+    caches = []
+    for seg_p, seg in zip(params["segments"], segments_of(cfg)):
+        slot_caches = []
+        for s, (ltype, _) in enumerate(seg.sig):
+            if ltype == "A":
+                one = attn.init_cache(cfg, batch, cache_len)
+            else:
+                one = ssm.init_mamba_cache(cfg, batch)
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (seg.groups, *x.shape)), one)
+            if cfg.is_encdec and enc_out is not None:
+                ek, ev = jax.vmap(attn.cross_kv, in_axes=(0, None))(
+                    seg_p["slots"][s]["cross"], enc_out)
+                stacked["enc_k"] = ek
+                stacked["enc_v"] = ev
+            slot_caches.append(stacked)
+        caches.append(slot_caches)
+    return caches
+
+
+def _run_segments_cached(params, x, caches, cfg: ModelConfig, layer_step, *,
+                         mesh=None, data_axes=("data",)):
+    """Shared scan driver for prefill-extend and decode: group-major layer
+    order (matching `_run_segments`), caches threaded as scan xs/ys."""
+    segs = segments_of(cfg)
+    new_caches = []
+    for seg_p, seg, seg_cache in zip(params["segments"], segs, caches):
+        def body(x, inp, seg=seg):
+            slot_params, slot_caches = inp
+            outs = []
+            for s, (ltype, is_moe) in enumerate(seg.sig):
+                x, c = layer_step(slot_params[s], x, slot_caches[s], ltype)
+                outs.append(c)
+            return x, tuple(outs)
+
+        x, upd = jax.lax.scan(body, x,
+                              (tuple(seg_p["slots"]), tuple(seg_cache)))
+        new_caches.append(list(upd))
+    return x, new_caches
+
+
+def extend_chunk(params, x, caches, cfg: ModelConfig, *, mesh=None,
+                 data_axes=("data",)):
+    """Run one chunk of tokens through all layers, updating caches."""
+    def step(p, x, c, ltype):
+        return _layer_extend(p, x, c, ltype, cfg, mesh=mesh,
+                             data_axes=data_axes, cross=cfg.is_encdec)
+    return _run_segments_cached(params, x, caches, cfg, step, mesh=mesh,
+                                data_axes=data_axes)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int, *,
+            mesh=None, data_axes=("data",)):
+    """Chunked prefill. Returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out, _ = _encoder_forward(params, batch["frames"].astype(x.dtype),
+                                      cfg, mesh=mesh, data_axes=data_axes)
+    caches = init_caches(params, cfg, B, cache_len, enc_out=enc_out)
+    Sx = x.shape[1]
+    chunk = cfg.prefill_chunk or Sx
+    if Sx % chunk != 0:
+        raise ValueError(f"prefill length {Sx} not divisible by chunk {chunk}")
+    n = Sx // chunk
+    if n == 1:
+        x, caches = extend_chunk(params, x, caches, cfg, mesh=mesh,
+                                 data_axes=data_axes)
+        h_last = x[:, -1:]
+    else:
+        # scan over chunks: caches are the carry, HLO stays one-chunk-sized
+        xc = x.reshape(B, n, chunk, -1).swapaxes(0, 1)
+
+        def chunk_body(caches, xi):
+            xi, caches = extend_chunk(params, xi, caches, cfg, mesh=mesh,
+                                      data_axes=data_axes)
+            return caches, xi[:, -1:]
+
+        caches, lasts = jax.lax.scan(chunk_body, caches, xc)
+        h_last = lasts[-1]
+    h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(params, h_last, cfg), caches
+
+
+def decode_step(params, token1, caches, cfg: ModelConfig, *, mesh=None,
+                data_axes=("data",)):
+    """One serve step: token1 (B,1) int32 -> (logits (B,1,V), caches)."""
+    x = _embed_tokens(params, token1, cfg)
+
+    def step(p, x, c, ltype):
+        return _layer_decode(p, x, c, ltype, cfg, mesh=mesh,
+                             data_axes=data_axes, cross=cfg.is_encdec)
+
+    x, new_caches = _run_segments_cached(params, x, caches, cfg, step,
+                                         mesh=mesh, data_axes=data_axes)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(params, x, cfg), new_caches

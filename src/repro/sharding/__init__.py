@@ -1,0 +1,4 @@
+from repro.sharding.specs import (param_shardings, batch_spec, batch_shardings,
+                                  spec_for)
+
+__all__ = ["param_shardings", "batch_spec", "batch_shardings", "spec_for"]

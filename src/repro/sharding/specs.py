@@ -1,0 +1,144 @@
+"""Sharding rules: hierarchical tensor/expert parallel + best-effort FSDP.
+
+The paper's hierarchical partitioning idea (fast axis shards the hot dim,
+slow axes shard the bulk) is applied to the LLM pool as a *rule engine*:
+
+  * each param name has a preferred TP dim → sharded over ``"model"`` (ICI)
+    when divisible (attention heads, FFN hidden, experts, vocab);
+  * large params additionally shard one remaining dim over the slow
+    ("pod","data") axes — FSDP-style, GSPMD inserts the all-gathers;
+  * anything non-divisible degrades gracefully to fewer axes (e.g. qwen1.5's
+    20 heads on a 16-wide model axis falls back to d_model/FSDP sharding).
+
+This makes every (arch x mesh) combination lower without per-arch tables,
+while keeping the intended 2-level hierarchy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# preferred (model-axis dim, data-axes dim) per param leaf name; dims are
+# tried in order, first divisible wins.
+_PREFERRED: dict[str, tuple[tuple[int, ...], tuple[int, ...]]] = {
+    "embed":    ((0,), (1,)),     # vocab over model, d over data
+    "lm_head":  ((1,), (0,)),
+    "wq":       ((1,), (0,)),     # heads over model, d over data
+    "wk":       ((1,), (0,)),
+    "wv":       ((1,), (0,)),
+    "wo":       ((0,), (2,)),
+    "bq":       ((0,), ()),
+    "bk":       ((0,), ()),
+    "bv":       ((0,), ()),
+    "w_gate":   ((1,), (0,)),     # ff over model (also experts: dim0 handled
+    "w_up":     ((1,), (0,)),     #   by the 3-D case below)
+    "w_down":   ((0,), (1,)),
+    "router":   ((), ()),
+    "wuq":      ((1,), (0,)),     # MLA: heads over model, rank over data
+    "wuk":      ((1,), (0,)),
+    "wuv":      ((1,), (0,)),
+    "wdq":      ((), (0,)),
+    "wdkv":     ((), (0,)),
+    "wkr":      ((), ()),
+    "in_proj":  ((), (0,)),       # mamba: keep concat dim whole
+    "out_proj": ((0,), (1,)),
+    "conv_w":   ((), ()),
+    "mtp_proj": ((), (0,)),
+}
+# 3-D expert tensors (E, d, ff): experts over model, d over data
+_PREFERRED_EXPERT = ((0,), (1,))
+_BIG = 1 << 20
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def spec_for(shape: tuple[int, ...], name: str, mesh: Mesh,
+             offset: int = 0) -> P:
+    """offset=1 for scan-stacked layer params (leading group dim, which must
+    never be sharded — each scan iteration slices one group)."""
+    model_n = mesh.shape.get("model", 1)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    data_n = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    numel = int(np.prod(shape)) if shape else 0
+    if numel < (1 << 16):   # norms/biases/small vectors: replicate
+        return P()
+
+    pref = _PREFERRED.get(name, ((0,), (1,)))
+    expert_case = (name in ("w_gate", "w_up", "w_down")
+                   and len(shape) - offset == 3)
+    if expert_case:
+        pref = _PREFERRED_EXPERT
+    pref_m = tuple(d + offset for d in pref[0])
+    pref_d = tuple(d + offset for d in pref[1])
+
+    assignment: list = [None] * len(shape)
+
+    # 2-D expert parallelism: expert dim over (data x model) jointly when it
+    # divides the whole mesh (matches mlp.moe_forward's EP choice; keeps
+    # expert weights fully resident — §Perf B.2)
+    if expert_case and data_axes and             shape[offset] % (model_n * data_n) == 0 and model_n * data_n > 1:
+        assignment[offset] = (*data_axes, "model")
+        return P(*assignment)
+
+    def try_assign(dims: tuple[int, ...], axes, size: int) -> bool:
+        for dim in dims:
+            if offset <= dim < len(shape) and assignment[dim] is None \
+                    and shape[dim] % size == 0 and size > 1:
+                assignment[dim] = axes
+                return True
+        return False
+
+    # 1) model axis on the preferred TP dim, falling back to any divisible dim
+    if not try_assign(pref_m, "model", model_n):
+        try_assign(tuple(i for i in range(offset, len(shape))
+                         if i not in pref_d), "model", model_n)
+    # 2) FSDP over the (pod, data) axes for big tensors
+    if numel >= _BIG and data_axes:
+        if not try_assign(pref_d, data_axes, data_n):
+            ok = False
+            if len(data_axes) > 1:  # try the trailing 'data' axis alone
+                sub = data_axes[-1:]
+                ok = try_assign(pref_d, sub, mesh.shape[sub[0]])
+            if not ok:  # any other shardable dim
+                try_assign(tuple(range(offset, len(shape))), data_axes, data_n)
+    return P(*assignment)
+
+
+def param_shardings(params, mesh: Mesh):
+    """NamedShardings for a param/optimizer pytree via the rule engine."""
+    def one(path, leaf):
+        stacked = any(getattr(e, "key", None) in ("segments", "enc_segments")
+                      for e in path if hasattr(e, "key"))
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape),
+                                            _leaf_name(path), mesh,
+                                            offset=1 if stacked else 0))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch dim over as many slow axes as divide it."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    for k in range(len(data_axes), 0, -1):
+        axes = data_axes[:k]
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if global_batch % n == 0 and n > 1:
+            return P(axes)
+    return P()
+
+
+def batch_shardings(batch_specs: dict, global_batch: int, mesh: Mesh):
+    bs = batch_spec(global_batch, mesh)
+
+    def one(leaf):
+        extra = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*bs, *extra))
+    return jax.tree_util.tree_map(one, batch_specs)

@@ -1,0 +1,6 @@
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step, synthetic_batch
+from repro.train.serve_step import make_prefill_step, make_decode_step
+
+__all__ = ["make_optimizer", "make_train_step", "synthetic_batch",
+           "make_prefill_step", "make_decode_step"]

@@ -1,0 +1,49 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (single-host).
+
+Leaves are keyed by their tree path; restore rebuilds into the template's
+structure (and dtype) so checkpoints survive config-compatible code changes.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
+    arrs = _flatten_with_names(tree)
+    if step is not None:
+        arrs["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrs)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore_checkpoint(path: str, template):
+    with np.load(path) as f:
+        data = {k: f[k] for k in f.files}
+    step = int(data.pop("__step__", -1))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves), step

@@ -1,0 +1,110 @@
+"""Optimizers: SGD, AdamW, Adafactor (factored second moment).
+
+Pure-pytree implementations (no optax dependency). Adafactor (beta1=0,
+factored v) is the memory-policy choice for the 42-671B archs: optimizer
+state is ~(rows+cols) instead of 2x params (DESIGN.md §5 memory budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _map_leaves(fn, params, *trees):
+    """Map over params' leaves; other trees may hold subtrees (e.g. factored
+    state dicts) at params' leaf positions."""
+    p_leaves, treedef = jax.tree.flatten(params)
+    others = [treedef.flatten_up_to(t) for t in trees]
+    outs = [fn(p, *rest) for p, *rest in zip(p_leaves, *others)]
+    if isinstance(outs[0], tuple):
+        return tuple(jax.tree.unflatten(treedef, [o[i] for o in outs])
+                     for i in range(len(outs[0])))
+    return jax.tree.unflatten(treedef, outs)
+
+
+def make_optimizer(name: str, lr: float = 1e-4, *, wd: float = 0.0,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    if name == "sgd":
+        def init(params):
+            return {"_": jnp.zeros(())}
+
+        def update(grads, state, params, step):
+            new = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                             - lr * g.astype(jnp.float32)
+                                             ).astype(p.dtype), params, grads)
+            return new, state
+        return Optimizer("sgd", init, update)
+
+    if name == "adamw":
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, jnp.float32)
+            return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+        def update(grads, state, params, step):
+            t = step.astype(jnp.float32) + 1.0
+
+            def upd(p, g, m, v):
+                g = g.astype(jnp.float32)
+                m = b1 * m + (1 - b1) * g
+                v = b2 * v + (1 - b2) * g * g
+                mh = m / (1 - b1 ** t)
+                vh = v / (1 - b2 ** t)
+                delta = lr * (mh / (jnp.sqrt(vh) + eps)
+                              + wd * p.astype(jnp.float32))
+                return (p.astype(jnp.float32) - delta).astype(p.dtype), m, v
+
+            new_p, new_m, new_v = _map_leaves(upd, params, grads,
+                                              state["m"], state["v"])
+            return new_p, {"m": new_m, "v": new_v}
+        return Optimizer("adamw", init, update)
+
+    if name == "adafactor":
+        def init(params):
+            def state_of(p):
+                if p.ndim >= 2:
+                    return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                            jnp.float32)}
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"f": jax.tree.map(state_of, params)}
+
+        def update(grads, state, params, step):
+            t = step.astype(jnp.float32) + 1.0
+            beta2t = 1.0 - t ** -0.8
+
+            def upd(p, g, s):
+                g = g.astype(jnp.float32)
+                g2 = g * g + 1e-30
+                if p.ndim >= 2:
+                    vr = beta2t * s["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                    vc = beta2t * s["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                    r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                    u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                             + 1e-30)
+                    ns = {"vr": vr, "vc": vc}
+                else:
+                    v = beta2t * s["v"] + (1 - beta2t) * g2
+                    u = g / (jnp.sqrt(v) + 1e-30)
+                    ns = {"v": v}
+                # RMS clip to 1.0 (adafactor's relative step clipping)
+                rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+                u = u / jnp.maximum(1.0, rms)
+                newp = (p.astype(jnp.float32) - lr * u
+                        - lr * wd * p.astype(jnp.float32)).astype(p.dtype)
+                return newp, ns
+
+            new_p, new_f = _map_leaves(upd, params, grads, state["f"])
+            return new_p, {"f": new_f}
+        return Optimizer("adafactor", init, update)
+
+    raise ValueError(f"unknown optimizer {name}")

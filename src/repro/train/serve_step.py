@@ -1,0 +1,74 @@
+"""Serving steps: chunked prefill and one-token decode (+ cache shardings)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.sharding.specs import batch_spec
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int, *, mesh=None,
+                      data_axes=("data",)):
+    def prefill_step(params, batch):
+        return tfm.prefill(params, batch, cfg, cache_len, mesh=mesh,
+                           data_axes=data_axes)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, mesh=None, data_axes=("data",)):
+    def decode(params, token, caches):
+        return tfm.decode_step(params, token, caches, cfg, mesh=mesh,
+                               data_axes=data_axes)
+    return decode
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length: the sliding window if set, else the full context."""
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, params_struct):
+    """Abstract cache pytree for the dry-run (ShapeDtypeStructs). Enc-dec
+    archs decode against a cross-attention memory of `frontend_len_cap`
+    frames (DESIGN.md §4)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len_cap, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return jax.eval_shape(
+        lambda p, e: tfm.init_caches(p, cfg, batch, cache_len, enc_out=e),
+        params_struct, enc_out)
+
+
+def cache_shardings(caches_struct, global_batch: int, mesh):
+    """Cache shardings: batch over the slow axes, heads (or head_dim / ssm
+    heads) over "model". Leading dim of every leaf is the scan-group dim."""
+    bs = batch_spec(global_batch, mesh)
+    bspec = bs[0] if len(bs) else None
+    model_n = mesh.shape.get("model", 1)
+    # preferred model-axis dims per cache leaf (after the (G, B, ...) prefix):
+    # kv heads first, then head_dim; ssm state prefers heads.
+    pref = {"k": (3, 4), "v": (3, 4), "enc_k": (3, 4), "enc_v": (3, 4),
+            "ckv": (3,), "kr": (3,), "state": (2, 3, 4), "conv": (3,)}
+
+    def one(path, leaf):
+        name = ""
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = str(e.key)
+                break
+        shp = leaf.shape  # (G, B, ...)
+        if name == "t" or len(shp) < 2:
+            return NamedSharding(mesh, P())
+        spec = [None, bspec] + [None] * (len(shp) - 2)
+        for dim in pref.get(name, ()):
+            if dim < len(shp) and shp[dim] % model_n == 0 and model_n > 1:
+                spec[dim] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, caches_struct)

@@ -1,0 +1,81 @@
+"""Training step: loss + grad + optimizer update, with gradient-accumulation
+microbatching (the memory policy that keeps MoE dispatch buffers and logits
+bounded on 16 GB chips — DESIGN.md §5)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.train.optimizer import make_optimizer
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0):
+    """Random-token batch with zipf-ish marginals (data pipeline stand-in)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.modality == "vision":
+        P = min(cfg.frontend_len_cap, seq // 2)
+        out["patch_embeds"] = rng.normal(0, 1, (batch, P, cfg.d_model)).astype(
+            np.dtype(cfg.compute_dtype))
+        seq = seq - P
+    if cfg.modality == "audio":
+        out["frames"] = rng.normal(0, 1, (batch, seq // 2, cfg.d_model)).astype(
+            np.dtype(cfg.compute_dtype))
+        seq = seq // 2
+    z = rng.zipf(1.3, size=(batch, seq))
+    out["tokens"] = np.minimum(z, cfg.vocab_size - 1).astype(np.int32)
+    out["positions"] = np.broadcast_to(np.arange(seq, dtype=np.int32),
+                                       (batch, seq)).copy()
+    return out
+
+
+def make_train_step(cfg: ModelConfig, *, mesh=None, data_axes=("data",),
+                    lr: float = 1e-4):
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics)."""
+    opt = make_optimizer(cfg.optimizer, lr=lr)
+
+    def loss_fn(params, mb):
+        loss, metrics = tfm.forward_train(params, mb, cfg, mesh=mesh,
+                                          data_axes=data_axes)
+        return loss, metrics
+
+    def train_step(params, opt_state, step, batch):
+        k = cfg.train_microbatches
+        if k <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # grad accumulation: scan over k microbatches
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(k, b // k, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_sum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_sum, g)
+                return (g_sum, l_sum + loss), None
+
+            (grads, loss), _ = jax.lax.scan(acc, (zero_g, jnp.float32(0.0)),
+                                            mbs)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss / k
+            metrics = {"xent": loss}
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt

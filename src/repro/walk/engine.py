@@ -1,0 +1,147 @@
+"""Decoupled random-walk engine (paper §III intro + §IV-A).
+
+The paper decouples random-walk network augmentation from embedding training:
+the walk engine runs on CPUs (Plato/KnightKing in the paper), writes episode-
+partitioned walk/sample files, and the GPU training engine consumes them —
+either offline (slow clusters) or pipelined one epoch ahead (fast clusters).
+
+This module is the CPU component. It produces walks (vectorized numpy
+DeepWalk / node2vec-style) and hands them to a :class:`SampleStore` partitioned
+by episode, applying the degree-guided partitioning of GraphVite [4]: walk
+start nodes are ordered so that high-degree nodes spread uniformly across
+episode partitions, balancing per-episode work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import queue as _queue
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.walk.augment import walks_to_pairs
+from repro.walk.store import SampleStore
+
+
+@dataclasses.dataclass
+class WalkConfig:
+    walk_length: int = 10          # paper's walk distance k
+    window: int = 5                # paper's walk context length l
+    walks_per_node: int = 1
+    node2vec_p: float = 1.0        # return parameter (1.0 == DeepWalk)
+    node2vec_q: float = 1.0        # in-out parameter
+    episodes: int = 8              # partitions per epoch
+    seed: int = 0
+
+
+class WalkEngine:
+    """Produces augmented edge samples, episode-partitioned.
+
+    ``run_epoch`` is synchronous; ``start_async``/``join`` run the engine on a
+    background thread so training of epoch *e* overlaps walk generation of
+    epoch *e+1* — the paper's pipelined decoupling.
+    """
+
+    def __init__(self, graph: CSRGraph, config: WalkConfig, store: SampleStore):
+        self.graph = graph
+        self.config = config
+        self.store = store
+        self._thread: threading.Thread | None = None
+        self._errors: _queue.Queue = _queue.Queue()
+
+    # ------------------------------------------------------------------ walks
+    def _step(self, cur: np.ndarray, prev: np.ndarray | None,
+              rng: np.random.Generator) -> np.ndarray:
+        """One vectorized walk step. Uniform choice for p=q=1, else 2nd-order."""
+        g = self.graph
+        deg = g.indptr[cur + 1] - g.indptr[cur]
+        safe_deg = np.maximum(deg, 1)
+        cfg = self.config
+        m = g.num_edges
+        if prev is None or (cfg.node2vec_p == 1.0 and cfg.node2vec_q == 1.0):
+            off = rng.integers(0, safe_deg)
+            # clamp: dead-end nodes produce an in-bounds dummy index that the
+            # final where(deg>0) mask discards
+            nxt = g.indices[np.minimum(g.indptr[cur] + off, m - 1)]
+        else:
+            # node2vec biased step via rejection sampling (Knightking-style):
+            # proposal = uniform neighbor; accept with weight/upper_bound.
+            upper = max(1.0, 1.0 / cfg.node2vec_p, 1.0 / cfg.node2vec_q)
+            nxt = np.empty_like(cur)
+            pending = np.arange(cur.size)
+            for _ in range(16):  # bounded retries, then fall back to uniform
+                if pending.size == 0:
+                    break
+                c = cur[pending]
+                off = rng.integers(0, np.maximum(g.indptr[c + 1] - g.indptr[c], 1))
+                prop = g.indices[np.minimum(g.indptr[c] + off, m - 1)]
+                w = np.full(prop.shape, 1.0 / cfg.node2vec_q)
+                w[prop == prev[pending]] = 1.0 / cfg.node2vec_p
+                # distance-1 check (shared neighbor) approximated as weight 1
+                # for proposals adjacent to prev — exact check is O(deg); the
+                # rejection bound keeps the walk distribution close (KnightKing).
+                accept = rng.random(prop.shape) < (w / upper)
+                nxt[pending[accept]] = prop[accept]
+                pending = pending[~accept]
+            if pending.size:
+                c = cur[pending]
+                off = rng.integers(0, np.maximum(g.indptr[c + 1] - g.indptr[c], 1))
+                nxt[pending] = g.indices[np.minimum(g.indptr[c] + off, m - 1)]
+        # dead ends (deg==0) stay in place
+        return np.where(deg > 0, nxt, cur)
+
+    def generate_walks(self, starts: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        """(num_walks, walk_length+1) int32 walk matrix."""
+        L = self.config.walk_length
+        walks = np.empty((starts.size, L + 1), dtype=np.int32)
+        walks[:, 0] = starts
+        prev = None
+        for t in range(L):
+            walks[:, t + 1] = self._step(walks[:, t], prev, rng)
+            prev = walks[:, t]
+        return walks
+
+    # --------------------------------------------------------------- episodes
+    def _episode_starts(self, epoch: int) -> list[np.ndarray]:
+        """Degree-guided partitioning of start nodes into episodes [4]:
+        sort by degree, deal round-robin so every episode gets a balanced mix."""
+        g, cfg = self.graph, self.config
+        rng = np.random.default_rng(cfg.seed + 1000003 * epoch)
+        starts = np.repeat(np.arange(g.num_nodes, dtype=np.int32), cfg.walks_per_node)
+        order = np.argsort(g.degrees().astype(np.int64)[starts % g.num_nodes], kind="stable")
+        starts = starts[order[::-1]]  # high-degree first
+        parts = [starts[i :: cfg.episodes] for i in range(cfg.episodes)]
+        for p in parts:
+            rng.shuffle(p)
+        return parts
+
+    def run_epoch(self, epoch: int) -> None:
+        """Generate walks + augmentation pairs for every episode of one epoch."""
+        cfg = self.config
+        for ep, starts in enumerate(self._episode_starts(epoch)):
+            rng = np.random.default_rng(cfg.seed + 7919 * epoch + ep)
+            walks = self.generate_walks(starts, rng)
+            pairs = walks_to_pairs(walks, cfg.window)
+            self.store.put(epoch, ep, pairs)
+        self.store.finish_epoch(epoch)
+
+    # ------------------------------------------------------------ async mode
+    def start_async(self, epoch: int) -> None:
+        def _run():
+            try:
+                self.run_epoch(epoch)
+            except Exception as e:
+                self._errors.put(e)
+                # wake any blocked store.get() so consumers fail fast rather
+                # than hang (they see the epoch finished with missing episodes)
+                self.store.finish_epoch(epoch)
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if not self._errors.empty():
+            raise self._errors.get()

@@ -1,0 +1,96 @@
+"""Sample store connecting the walk engine to the training engine (paper Fig. 2).
+
+The two engines are decoupled: the walk engine `put`s episode-partitioned
+sample arrays, the trainer `get`s them. Two backends mirror the paper's two
+cluster modes (§IV-A): in-memory (fast clusters, samples stay resident) and
+disk (slow clusters: offline files partitioned by episode, memory-mapped).
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+
+
+class SampleStore:
+    def put(self, epoch: int, episode: int, pairs: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def get(self, epoch: int, episode: int, *, block: bool = True) -> np.ndarray:
+        raise NotImplementedError
+
+    def finish_epoch(self, epoch: int) -> None:
+        pass
+
+    def episodes(self, epoch: int) -> int:
+        raise NotImplementedError
+
+
+class MemorySampleStore(SampleStore):
+    """Thread-safe in-memory store; trainer blocks until the walker delivers."""
+
+    def __init__(self):
+        self._data: dict[tuple[int, int], np.ndarray] = {}
+        self._done: set[int] = set()
+        self._cv = threading.Condition()
+
+    def put(self, epoch, episode, pairs):
+        with self._cv:
+            self._data[(epoch, episode)] = pairs
+            self._cv.notify_all()
+
+    def finish_epoch(self, epoch):
+        with self._cv:
+            self._done.add(epoch)
+            self._cv.notify_all()
+
+    def get(self, epoch, episode, *, block=True):
+        with self._cv:
+            while (epoch, episode) not in self._data:
+                if not block or (epoch in self._done):
+                    raise KeyError((epoch, episode))
+                self._cv.wait(timeout=60.0)
+            return self._data[(epoch, episode)]
+
+    def episodes(self, epoch):
+        with self._cv:
+            while epoch not in self._done:
+                self._cv.wait(timeout=60.0)
+            return len([k for k in self._data if k[0] == epoch])
+
+    def drop_epoch(self, epoch: int) -> None:
+        with self._cv:
+            for k in [k for k in self._data if k[0] == epoch]:
+                del self._data[k]
+            self._done.discard(epoch)
+
+
+class DiskSampleStore(SampleStore):
+    """Episode-partitioned .npy files, loaded with mmap (paper's SSD mode)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, epoch, episode):
+        return os.path.join(self.root, f"epoch{epoch:04d}_ep{episode:04d}.npy")
+
+    def put(self, epoch, episode, pairs):
+        tmp = self._path(epoch, episode) + ".tmp.npy"
+        np.save(tmp, pairs)
+        os.replace(tmp, self._path(epoch, episode))
+
+    def finish_epoch(self, epoch):
+        with open(os.path.join(self.root, f"epoch{epoch:04d}.done"), "w") as f:
+            f.write("done")
+
+    def get(self, epoch, episode, *, block=True):
+        path = self._path(epoch, episode)
+        if not os.path.exists(path):
+            raise KeyError((epoch, episode))
+        return np.load(path, mmap_mode="r")
+
+    def episodes(self, epoch):
+        pre = f"epoch{epoch:04d}_ep"
+        return len([f for f in os.listdir(self.root) if f.startswith(pre) and f.endswith(".npy")])

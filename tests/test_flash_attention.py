@@ -1,0 +1,65 @@
+"""Flash-attention Pallas kernel vs oracle: shape/dtype sweep + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, mha_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, H, Hkv, Sq, Skv, hd, dtype=jnp.float32):
+    q = (jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, Sq, hd)) * 0.5
+         ).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, Skv, hd)) * 0.5
+         ).astype(dtype)
+    v = (jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, Skv, hd)) * 0.5
+         ).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,Skv,hd,causal,window,tq,tk", [
+    (2, 4, 4, 64, 64, 32, True, 0, 32, 32),
+    (1, 4, 2, 64, 128, 32, True, 0, 32, 64),      # GQA
+    (2, 2, 2, 96, 96, 16, True, 24, 32, 32),      # sliding window
+    (1, 2, 1, 64, 64, 64, False, 0, 64, 32),      # cross-attn style
+    (1, 8, 8, 128, 128, 8, True, 0, 128, 32),
+])
+def test_flash_matches_ref(B, H, Hkv, Sq, Skv, hd, causal, window, tq, tk):
+    q, k, v = _qkv(B, H, Hkv, Sq, Skv, hd)
+    o0 = mha_ref(q, k, v, causal=causal, window=window)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         tile_q=tq, tile_k=tk, interpret=True)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(o1),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 2, 2, 64, 64, 32, jnp.bfloat16)
+    o0 = mha_ref(q, k, v)
+    o1 = flash_attention(q, k, v, tile_q=32, tile_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o0, np.float32),
+                               np.asarray(o1, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(tq=st.sampled_from([16, 32, 64]), tk=st.sampled_from([16, 32, 64]))
+def test_flash_tile_invariance(tq, tk):
+    """Property: output must not depend on the VMEM tiling."""
+    q, k, v = _qkv(1, 2, 2, 64, 64, 16)
+    base = flash_attention(q, k, v, tile_q=64, tile_k=64, interpret=True)
+    out = flash_attention(q, k, v, tile_q=tq, tile_k=tk, interpret=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(out),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_rows_are_convex_combinations():
+    """Property: each output row lies in the convex hull of v rows (softmax
+    weights sum to 1) — catches denominator/accumulator bugs."""
+    q, k, v = _qkv(1, 1, 1, 32, 32, 8)
+    v = jnp.ones_like(v)  # all-ones values => output must be exactly ones
+    out = flash_attention(q, k, v, tile_q=16, tile_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)

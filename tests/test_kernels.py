@@ -1,0 +1,141 @@
+"""Per-kernel allclose vs the pure-jnp oracle (interpret mode on CPU),
+swept over shapes/dtypes + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref, sgns
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype=jnp.float32, k=0, scale=0.1):
+    return (jax.random.normal(jax.random.fold_in(KEY, k), shape) * scale
+            ).astype(dtype)
+
+
+@pytest.mark.parametrize("B,d,S,block_b", [
+    (128, 128, 16, 64),
+    (256, 64, 8, 256),
+    (512, 256, 32, 128),
+    (64, 32, 4, 64),
+])
+def test_sgns_grads_matches_ref(B, d, S, block_b):
+    v, c, n = _rand((B, d), k=1), _rand((B, d), k=2), _rand((S, d), k=3)
+    mask = (jax.random.uniform(jax.random.fold_in(KEY, 4), (B,)) > 0.2
+            ).astype(jnp.float32)
+    l0, dv0, dc0, dn0 = ref.sgns_grads_ref(v, c, n, mask)
+    l1, dv1, dc1, dn1 = sgns.sgns_grads(v, c, n, mask, block_b=block_b,
+                                        interpret=True)
+    np.testing.assert_allclose(l0, l1, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(dv0, dv1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dc0, dc1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dn0, dn1, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,d,B", [(50, 128, 20), (200, 64, 64), (7, 32, 9)])
+def test_gather_rows(N, d, B):
+    tbl = _rand((N, d), k=5)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 6), (B,), 0, N)
+    out = sgns.gather_rows(tbl, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.gather_rows_ref(tbl, idx)))
+
+
+@pytest.mark.parametrize("dup", [False, True])
+def test_scatter_add_rows(dup):
+    N, d, B = 40, 64, 32
+    tbl = _rand((N, d), k=7)
+    if dup:
+        idx = jnp.zeros(B, jnp.int32).at[B // 2:].set(3)
+    else:
+        idx = jnp.asarray(np.random.default_rng(0).permutation(N)[:B])
+    upd = _rand((B, d), k=8)
+    out = sgns.scatter_add_rows(tbl, idx, upd, interpret=True)
+    expect = ref.scatter_add_rows_ref(tbl, idx, upd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sgns_step_paths_agree():
+    Nv, Nc, d, B, S = 64, 80, 128, 96, 16
+    vert, ctx = _rand((Nv, d), k=9), _rand((Nc, d), k=10)
+    iv = jax.random.randint(jax.random.fold_in(KEY, 11), (B,), 0, Nv)
+    ic = jax.random.randint(jax.random.fold_in(KEY, 12), (B,), 0, Nc)
+    inn = jax.random.randint(jax.random.fold_in(KEY, 13), (S,), 0, Nc)
+    mask = jnp.ones(B)
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr, impl="ref")
+    v1, c1, l1 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr, impl="pallas")
+    np.testing.assert_allclose(l0, l1, rtol=3e-5)
+    np.testing.assert_allclose(v0, v1, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(c0, c1, rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("Bt", [16, 64])
+def test_sgns_fused_grads_matches_ref(Bt):
+    """The fused DMA-gather+grads kernel (the paper's CUDA hot loop,
+    TPU-native) against the compose-of-oracles reference."""
+    Nv, Nc, d, B, S = 70, 90, 64, 64, 8
+    vert, ctx = _rand((Nv, d), k=40), _rand((Nc, d), k=41)
+    iv = jax.random.randint(jax.random.fold_in(KEY, 42), (B,), 0, Nv)
+    ic = jax.random.randint(jax.random.fold_in(KEY, 43), (B,), 0, Nc)
+    inn = jax.random.randint(jax.random.fold_in(KEY, 44), (S,), 0, Nc)
+    mask = (jax.random.uniform(jax.random.fold_in(KEY, 45), (B,)) > 0.2
+            ).astype(jnp.float32)
+    v, c, n = (ref.gather_rows_ref(vert, iv), ref.gather_rows_ref(ctx, ic),
+               ref.gather_rows_ref(ctx, inn))
+    l0, dv0, dc0, dn0 = ref.sgns_grads_ref(v, c, n, mask)
+    l1, dv1, dc1, dn1 = sgns.sgns_fused_grads(vert, ctx, iv, ic, inn, mask,
+                                              block_b=Bt, interpret=True)
+    np.testing.assert_allclose(l0, l1, rtol=3e-5)
+    np.testing.assert_allclose(dv0, dv1, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dc0, dc1, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dn0, dn1, rtol=1e-4, atol=1e-6)
+
+
+def test_sgns_step_fused_path():
+    Nv, Nc, d, B, S = 40, 50, 32, 32, 4
+    vert, ctx = _rand((Nv, d), k=50), _rand((Nc, d), k=51)
+    iv = jax.random.randint(jax.random.fold_in(KEY, 52), (B,), 0, Nv)
+    ic = jax.random.randint(jax.random.fold_in(KEY, 53), (B,), 0, Nc)
+    inn = jax.random.randint(jax.random.fold_in(KEY, 54), (S,), 0, Nc)
+    mask = jnp.ones(B)
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr, impl="ref")
+    v1, c1, l1 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr,
+                               impl="pallas_fused")
+    np.testing.assert_allclose(l0, l1, rtol=3e-5)
+    np.testing.assert_allclose(v0, v1, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(c0, c1, rtol=2e-4, atol=1e-6)
+
+
+def test_sgns_grads_is_true_gradient():
+    """dv/dc/dn must equal autodiff gradients of the SGNS loss."""
+    B, d, S = 32, 16, 8
+    v, c, n = _rand((B, d), k=20), _rand((B, d), k=21), _rand((S, d), k=22)
+    mask = jnp.ones(B)
+
+    def loss_fn(v, c, n):
+        return ref.sgns_grads_ref(v, c, n, mask)[0]
+
+    gv, gc, gn = jax.grad(loss_fn, argnums=(0, 1, 2))(v, c, n)
+    _, dv, dc, dn = ref.sgns_grads_ref(v, c, n, mask)
+    np.testing.assert_allclose(gv, dv, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gc, dc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gn, dn, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 64), d=st.sampled_from([8, 32, 128]),
+       S=st.integers(1, 16))
+def test_sgns_mask_zeroes_padding(B, d, S):
+    """Property: fully-masked batches produce zero loss and zero grads."""
+    v, c, n = _rand((B, d), k=30), _rand((B, d), k=31), _rand((S, d), k=32)
+    loss, dv, dc, dn = ref.sgns_grads_ref(v, c, n, jnp.zeros(B))
+    assert float(loss) == 0.0
+    assert float(jnp.abs(dv).max()) == 0.0
+    assert float(jnp.abs(dn).max()) == 0.0

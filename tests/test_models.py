@@ -1,0 +1,137 @@
+"""Model-family correctness: train forward, prefill/decode consistency
+(serve path must reproduce the training forward's logits)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+from repro.models.common import rms_norm
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def full_logits(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], 1)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out, _ = tfm._encoder_forward(params,
+                                          batch["frames"].astype(x.dtype), cfg)
+    x, _ = tfm._run_segments(params["segments"], tfm.segments_of(cfg), x, cfg,
+                             enc_out=enc_out, cross=cfg.is_encdec)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tfm._lm_logits(params, x, cfg)
+
+
+CASES = {
+    "dense": ModelConfig(name="dense", arch_type="dense", num_layers=2,
+                         d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                         vocab_size=256, qkv_bias=True),
+    "mla_moe": ModelConfig(name="mla", arch_type="moe", num_layers=3,
+                           d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                           vocab_size=256, mla=True, q_lora_rank=32,
+                           kv_lora_rank=32, qk_nope_head_dim=16,
+                           qk_rope_head_dim=8, v_head_dim=16,
+                           moe_num_experts=4, moe_top_k=2, moe_d_ff=64,
+                           moe_layer_start=1, moe_num_shared=1,
+                           moe_capacity_factor=8.0, mtp=True),
+    "ssm": ModelConfig(name="ssm", arch_type="ssm", num_layers=2, d_model=64,
+                       num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=256,
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8),
+    "hybrid": ModelConfig(name="hybrid", arch_type="hybrid", num_layers=4,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=256, layer_pattern="AM", ssm_state=16,
+                          ssm_head_dim=16, ssm_chunk=8),
+    "encdec": ModelConfig(name="audio", arch_type="audio", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=256, encoder_layers=2, modality="audio"),
+    "vlm": ModelConfig(name="vlm", arch_type="vlm", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                       modality="vision"),
+    "chunked_prefill": ModelConfig(name="chunked", arch_type="dense",
+                                   num_layers=2, d_model=64, num_heads=4,
+                                   num_kv_heads=2, d_ff=128, vocab_size=256,
+                                   prefill_chunk=8),
+    "sliding": ModelConfig(name="sliding", arch_type="dense", num_layers=2,
+                           d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                           vocab_size=256, sliding_window=64),
+}
+
+
+def make_batch(cfg, B=2, S=24):
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(KEY, 1), (B, S),
+                                          0, cfg.vocab_size)}
+    if cfg.modality == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(KEY, 2), (B, 8, cfg.d_model))
+    if cfg.modality == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(KEY, 3), (B, 16, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_train_forward_finite(name):
+    cfg = CASES[name]
+    params = tfm.init_params(jax.random.fold_in(KEY, 7), cfg)
+    loss, metrics = tfm.forward_train(params, make_batch(cfg), cfg)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_prefill_and_decode_match_forward(name):
+    cfg = CASES[name]
+    B, S = 2, 24
+    batch = make_batch(cfg, B, S)
+    params = tfm.init_params(jax.random.fold_in(KEY, 8), cfg)
+    lf = full_logits(params, batch, cfg)
+    lp, caches = tfm.prefill(params, batch, cfg, cache_len=S + 16)
+    np.testing.assert_allclose(np.asarray(lf[:, -1]), np.asarray(lp[:, 0]),
+                               rtol=2e-3, atol=2e-3)
+    nxt = jnp.argmax(lp[:, 0], -1).astype(jnp.int32)[:, None]
+    ld, _ = tfm.decode_step(params, nxt, caches, cfg)
+    batch2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    lf2 = full_logits(params, batch2, cfg)
+    np.testing.assert_allclose(np.asarray(lf2[:, -1]), np.asarray(ld[:, 0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_segments_of_deepseek_pattern():
+    cfg = ModelConfig(name="ds", arch_type="moe", num_layers=7, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      moe_num_experts=4, moe_top_k=2, moe_d_ff=32,
+                      moe_layer_start=3)
+    segs = tfm.segments_of(cfg)
+    assert [(s.groups, s.sig) for s in segs] == [
+        (3, (("A", False),)), (4, (("A", True),))]
+
+
+def test_segments_of_jamba_pattern():
+    cfg = ModelConfig(name="j", arch_type="hybrid", num_layers=16, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      layer_pattern="MMMMAMMM", ssm_state=8, ssm_head_dim=8,
+                      moe_num_experts=4, moe_top_k=2, moe_d_ff=32,
+                      moe_layer_start=1, moe_layer_period=2)
+    segs = tfm.segments_of(cfg)
+    assert len(segs) == 1 and segs[0].groups == 2
+    assert len(segs[0].sig) == 8
+    assert segs[0].sig[4][0] == "A"
+    assert segs[0].sig[1] == ("M", True)
+
+
+def test_sliding_window_limits_attention():
+    """A token far outside the window must not influence the last logit."""
+    cfg = CASES["sliding"]
+    cfg = cfg.__class__(**{**cfg.__dict__, "sliding_window": 4})
+    params = tfm.init_params(jax.random.fold_in(KEY, 9), cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 10), (1, 16), 0, 256)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % 256)  # outside window of last
+    l1 = full_logits(params, {"tokens": toks}, cfg)
+    l2 = full_logits(params, {"tokens": toks2}, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,64 @@
+"""Optimizers + checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.optimizer import make_optimizer
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = make_optimizer(name, lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5),
+              "mat": jnp.ones((4, 8))}
+    state = opt.init(params)
+
+    def loss(p):
+        return (jnp.sum(p["w"] ** 2) + p["b"] ** 2
+                + jnp.sum(p["mat"] ** 2))
+
+    l0 = float(loss(params))
+    for step in range(50):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer("adafactor", lr=1e-2)
+    params = {"big": jnp.ones((64, 128)), "vec": jnp.ones((7,))}
+    st = opt.init(params)
+    assert st["f"]["big"]["vr"].shape == (64,)
+    assert st["f"]["big"]["vc"].shape == (128,)
+    assert st["f"]["vec"]["v"].shape == (7,)
+
+
+def test_adamw_dtype_preserved():
+    opt = make_optimizer("adamw", lr=1e-2)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    st = opt.init(params)
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new, st = opt.update(grads, st, params, jnp.int32(0))
+    assert new["w"].dtype == jnp.bfloat16
+    assert st["m"]["w"].dtype == jnp.float32  # master stats in f32
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"x": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "b": [np.ones(4, np.int32), np.zeros((2, 2), np.float32)]}
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, step=7)
+    tpl = jax.tree.map(jnp.asarray, tree)
+    restored, step = restore_checkpoint(path, tpl)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": np.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"w": jnp.ones((3, 3))})

@@ -1,0 +1,84 @@
+"""Invariants of the hierarchical partitioning + rotation schedule —
+the correctness core of the paper's hybrid parallel training."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rotation
+from repro.core.partition import NodePartition, build_episode_blocks
+
+
+@pytest.mark.parametrize("dims", [(1, 1), (2, 2), (1, 4), (4, 2), (2, 3, 4)])
+def test_schedule_bijections(dims):
+    rotation.check_schedule(dims)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.tuples(st.integers(1, 4), st.integers(1, 4)),
+       st.tuples(st.integers(0, 3), st.integers(0, 3)))
+def test_round_of_pair_inverts_schedule(dims, dev):
+    dev = tuple(d % n for d, n in zip(dev, dims))
+    for v_flat in range(int(np.prod(dims))):
+        vc = []
+        rem = v_flat
+        for n in dims[::-1]:
+            vc.append(rem % n)
+            rem //= n
+        vc = tuple(vc[::-1])
+        rnd = rotation.round_of_pair(dev, vc, dims)
+        assert rotation.vertex_shard_at(dev, rnd, dims) == v_flat
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_nodes=st.integers(50, 400), n_pairs=st.integers(1, 800),
+       dims=st.sampled_from([(1, 1), (2, 2), (1, 4), (2, 4)]),
+       k=st.sampled_from([1, 2, 4]))
+def test_episode_blocks_place_every_pair_exactly_once(n_nodes, n_pairs,
+                                                      dims, k):
+    """Every sample lands in exactly one cell; its cell is consistent with
+    the rotation schedule; local indices invert to the original node ids."""
+    rng = np.random.default_rng(42)
+    pairs = rng.integers(0, n_nodes, size=(n_pairs, 2)).astype(np.int32)
+    part = NodePartition(n_nodes, dims=dims, subparts=k)
+    eb = build_episode_blocks(pairs, part, pad_multiple=8)
+    assert eb.dropped == 0
+    assert int(eb.counts.sum()) == n_pairs
+
+    rows = part.padded_rows_per_shard
+    rows_sub = part.rows_per_subpart
+    P = part.num_shards
+    recovered = []
+    for dev in range(P):
+        dev_c = part.shard_coord(np.array([dev]))
+        dev_c = tuple(int(c[0]) for c in dev_c)
+        it = np.ndindex(*dims)
+        for rnd in it:
+            for j in range(k):
+                cnt = eb.counts[(dev, *rnd, j)]
+                blk = eb.blocks[(dev, *rnd, j)][:cnt]
+                v_shard = rotation.vertex_shard_at(dev_c, rnd, dims)
+                u = v_shard * rows + j * rows_sub + blk[:, 0]
+                v = dev * rows + blk[:, 1]
+                recovered.append(np.stack([u, v], 1))
+    recovered = np.concatenate(recovered, 0)
+    # same multiset of pairs
+    key = lambda a: np.sort(a[:, 0].astype(np.int64) * (10 ** 9) + a[:, 1])
+    np.testing.assert_array_equal(key(recovered), key(pairs))
+
+
+def test_block_cap_drops_overflow():
+    rng = np.random.default_rng(0)
+    pairs = np.zeros((500, 2), np.int32)  # all in one cell
+    part = NodePartition(100, dims=(1, 1), subparts=1)
+    eb = build_episode_blocks(pairs, part, block_cap=64, pad_multiple=64)
+    assert eb.dropped == 500 - 64
+    assert eb.counts.max() == 64
+
+
+def test_padding_roundtrip():
+    part = NodePartition(103, dims=(2, 2), subparts=4)
+    t = np.arange(103 * 3, dtype=np.float32).reshape(103, 3)
+    padded = part.pad_table(t)
+    assert padded.shape[0] == part.padded_num_nodes
+    assert padded.shape[0] % (part.num_shards * part.subparts) == 0
+    np.testing.assert_array_equal(part.unpad_table(padded), t)

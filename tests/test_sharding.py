@@ -1,0 +1,98 @@
+"""Sharding rule engine invariants (no devices needed beyond 1 — we only
+build PartitionSpecs against an abstract mesh via mock shapes)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sharding.specs import batch_spec, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: .shape mapping + .axis_names (spec_for needs only
+    these)."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisible(shape, spec, mesh):
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        assert shape[dim] % n == 0, (shape, spec)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    name=st.sampled_from(["embed", "wq", "wk", "wo", "w_gate", "w_down",
+                          "in_proj", "router", "unknown_leaf"]),
+    shape=st.lists(st.sampled_from([1, 3, 8, 16, 20, 64, 128, 151936, 7168]),
+                   min_size=1, max_size=4),
+    mesh=st.sampled_from([MESH1, MESH2]),
+    offset=st.sampled_from([0, 1]),
+)
+def test_spec_always_divides(name, shape, mesh, offset):
+    spec = spec_for(tuple(shape), name, mesh, offset=offset)
+    assert len(spec) <= len(shape)
+    _check_divisible(shape, tuple(spec) + (None,) * (len(shape) - len(spec)),
+                     mesh)
+
+
+def test_stacked_offset_protects_group_dim():
+    # stacked expert weights (G, E, d, ff): G must stay unsharded; 256
+    # experts on a 256-chip mesh get 2-D EP over (data x model)
+    spec = spec_for((58, 256, 7168, 2048), "w_gate", MESH1, offset=1)
+    assert spec[0] is None
+    assert _norm(spec[1]) == ("data", "model")
+    # 16 experts (phi/jamba) fall back to model-axis EP
+    spec16 = spec_for((32, 16, 4096, 6400), "w_gate", MESH1, offset=1)
+    assert spec16[0] is None
+    assert spec16[1] == "model"
+
+
+def test_vocab_sharded_over_model():
+    spec = spec_for((151936, 2560), "embed", MESH1)
+    assert spec[0] == "model"
+
+
+def test_nondivisible_heads_fall_back():
+    # qwen1.5-4b: 20 heads on a 16-wide model axis -> not head-sharded
+    spec = spec_for((24, 2560, 20, 128), "wq", MESH1, offset=1)
+    assert spec[2] is None or spec[2] != "model" or 20 % 16 == 0
+    _check_divisible((24, 2560, 20, 128), tuple(spec) + (None,) * 4, MESH1)
+
+
+def test_small_params_not_fsdp_sharded():
+    spec = spec_for((64,), "ln1", MESH1)
+    assert all(s is None for s in spec)
+
+
+def _norm(entry):
+    """PartitionSpec normalizes 1-tuples to plain strings."""
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+@pytest.mark.parametrize("B,expect_axes", [
+    (256, ("data",)), (16, ("data",)), (8, ()), (1, ()),
+])
+def test_batch_spec_single_pod(B, expect_axes):
+    m = FakeMesh({"data": 16, "model": 16})
+    bs = batch_spec(B, m)
+    got = _norm(bs[0]) if len(bs) else ()
+    assert got == expect_axes
+
+
+def test_batch_spec_multipod():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert _norm(batch_spec(256, m)[0]) == ("pod", "data")
+    assert _norm(batch_spec(32, m)[0]) == ("pod", "data")
+    assert _norm(batch_spec(16, m)[0]) == ("pod",)

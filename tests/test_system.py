@@ -1,0 +1,128 @@
+"""End-to-end behaviour of the paper's system (integration tests).
+
+The quality bar mirrors the paper's Table IV claim shape: after training,
+link-prediction AUC on held-out edges of a community-structured graph is
+(a) far above chance and (b) at least as good as the GraphVite-style
+parameter-server baseline trained with the identical schedule.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EpisodePipeline, HybridConfig, HybridEmbeddingTrainer,
+                        ParameterServerTrainer, build_episode_blocks)
+from repro.core import eval as ev
+from repro.graph.csr import build_csr
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+
+def _train(trainer, g, epochs, cfg, seed0=0):
+    store = MemorySampleStore()
+    losses = []
+    for epoch in range(epochs):
+        eng = WalkEngine(g, WalkConfig(walk_length=10, window=5, episodes=1,
+                                       seed=seed0 + epoch), store)
+        eng.run_epoch(epoch)
+        eb = build_episode_blocks(np.asarray(store.get(epoch, 0)),
+                                  trainer.part, pad_multiple=cfg.minibatch)
+        lr = cfg.lr * max(1 - epoch / epochs, 0.05)
+        losses.append(trainer.train_episode(eb, lr=lr))
+        store.drop_epoch(epoch)
+    return losses
+
+
+def _vv_auc(V, test_e, neg_e):
+    Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
+    return ev.auc_score(
+        np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
+        np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
+
+
+@pytest.fixture(scope="module")
+def lp_setup():
+    rng = np.random.default_rng(0)
+    n, k = 1200, 12
+    comm = rng.integers(0, k, n)
+    src, dst = [], []
+    for _ in range(30):
+        a = rng.integers(0, n, 20000)
+        b = rng.integers(0, n, 20000)
+        keep = rng.random(20000) < np.where(comm[a] == comm[b], 0.08, 0.001)
+        src.append(a[keep]); dst.append(b[keep])
+    g_full = build_csr(np.stack([np.concatenate(src), np.concatenate(dst)], 1), n)
+    train_e, test_e = ev.split_edges(g_full, 0.05, seed=1)
+    g = build_csr(train_e, n, symmetrize=False, dedup=False)
+    neg_e = ev.sample_negative_pairs(g_full, len(test_e), seed=3)
+    return g, test_e, neg_e
+
+
+def test_hybrid_learns_link_prediction(lp_setup):
+    g, test_e, neg_e = lp_setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = HybridConfig(dim=64, minibatch=32, negatives=8, subparts=2,
+                       neg_pool=2048, lr=0.025)
+    tr = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+    tr.init_embeddings()
+    losses = _train(tr, g, 12, cfg)
+    assert losses[-1] < losses[0] * 0.6, losses
+    auc = _vv_auc(tr.embeddings(), test_e, neg_e)
+    assert auc > 0.72, auc
+
+
+def test_hybrid_accuracy_not_worse_than_ps_baseline(lp_setup):
+    """Paper claim: 'competitive or better accuracy' vs GraphVite."""
+    g, test_e, neg_e = lp_setup
+    cfg = HybridConfig(dim=64, minibatch=32, negatives=8, subparts=2,
+                       neg_pool=2048, lr=0.025)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hy = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+    hy.init_embeddings()
+    _train(hy, g, 8, cfg)
+    auc_h = _vv_auc(hy.embeddings(), test_e, neg_e)
+
+    ps = ParameterServerTrainer(g.num_nodes, 1, cfg, degrees=g.degrees())
+    _train(ps, g, 8, cfg)
+    auc_p = _vv_auc(ps.embeddings(), test_e, neg_e)
+    assert auc_h > auc_p - 0.03, (auc_h, auc_p)
+
+
+def test_subpart_pipelining_is_semantics_preserving(lp_setup):
+    """fuse_subpart_permute only changes overlap structure, not math: the
+    paper's k-sub-part ping-pong must give identical embeddings to the
+    bulk-transfer variant on the same schedule."""
+    g, _, _ = lp_setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    out = []
+    for fuse in (True, False):
+        cfg = HybridConfig(dim=32, minibatch=64, negatives=4, subparts=2,
+                           neg_pool=512, lr=0.05,
+                           fuse_subpart_permute=fuse)
+        tr = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                    degrees=g.degrees())
+        tr.init_embeddings()
+        _train(tr, g, 2, cfg)
+        out.append(tr.embeddings())
+    np.testing.assert_allclose(out[0], out[1], rtol=1e-6, atol=1e-7)
+
+
+def test_episode_pipeline_prefetch(lp_setup):
+    g, _, _ = lp_setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = HybridConfig(dim=32, minibatch=64, negatives=4, subparts=1,
+                       neg_pool=512)
+    tr = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+    tr.init_embeddings()
+    store = MemorySampleStore()
+    eng = WalkEngine(g, WalkConfig(walk_length=6, window=3, episodes=3),
+                     store)
+    eng.start_async(0)
+    pipe = EpisodePipeline(store, tr.part, pad_multiple=cfg.minibatch)
+    pipe.prefetch(0, 0)
+    for ep in range(3):
+        eb = pipe.get(0, ep)
+        if ep + 1 < 3:
+            pipe.prefetch(0, ep + 1)
+        loss = tr.train_episode(eb)
+        assert np.isfinite(loss)
+    eng.join()
+    pipe.close()

@@ -1,0 +1,97 @@
+"""Walk engine, augmentation, alias sampler, sample store."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import mesh_graph, powerlaw_graph, rmat_graph
+from repro.walk import (AliasTable, MemorySampleStore, WalkConfig, WalkEngine,
+                        walks_to_pairs)
+from repro.walk.alias import negative_sampling_table
+from repro.walk.store import DiskSampleStore
+
+
+def test_walks_stay_on_graph():
+    g = powerlaw_graph(500, 4, seed=1)
+    eng = WalkEngine(g, WalkConfig(walk_length=12, window=4), MemorySampleStore())
+    rng = np.random.default_rng(0)
+    walks = eng.generate_walks(np.arange(200, dtype=np.int32), rng)
+    adj = {v: set(g.neighbors(v)) for v in range(g.num_nodes)}
+    for w in walks[:50]:
+        for a, b in zip(w[:-1], w[1:]):
+            assert b in adj[a] or (a == b and len(adj[a]) == 0)
+
+
+def test_walks_to_pairs_window():
+    walks = np.array([[0, 1, 2, 3, 4]], dtype=np.int32)
+    pairs = walks_to_pairs(walks, window=2)
+    got = set(map(tuple, pairs.tolist()))
+    want = {(0, 1), (1, 2), (2, 3), (3, 4), (0, 2), (1, 3), (2, 4)}
+    assert got == want
+
+
+def test_pairs_drop_self_loops_from_stalls():
+    walks = np.array([[5, 5, 5]], dtype=np.int32)  # dead-end stall
+    assert walks_to_pairs(walks, window=2).shape[0] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=50))
+def test_alias_table_distribution(weights):
+    w = np.asarray(weights)
+    tab = AliasTable(w)
+    rng = np.random.default_rng(0)
+    s = tab.sample(20000, rng)
+    emp = np.bincount(s, minlength=len(w)) / 20000.0
+    np.testing.assert_allclose(emp, w / w.sum(), atol=0.05)
+
+
+def test_negative_sampling_power():
+    deg = np.array([1, 16, 81, 0])
+    tab = negative_sampling_table(deg, power=0.75)
+    rng = np.random.default_rng(1)
+    s = tab.sample(40000, rng)
+    emp = np.bincount(s, minlength=4) / 40000.0
+    w = np.maximum(deg.astype(float) ** 0.75, 1e-12)
+    np.testing.assert_allclose(emp, w / w.sum(), atol=0.02)
+
+
+def test_engine_epoch_and_degree_guided_balance():
+    g = powerlaw_graph(800, 4, seed=3)
+    store = MemorySampleStore()
+    eng = WalkEngine(g, WalkConfig(walk_length=8, window=3, episodes=4), store)
+    eng.run_epoch(0)
+    sizes = [store.get(0, e).shape[0] for e in range(4)]
+    assert min(sizes) > 0
+    # degree-guided round-robin keeps episodes balanced within ~25%
+    assert max(sizes) / min(sizes) < 1.25
+
+
+def test_async_engine_overlap():
+    g = rmat_graph(8, 4, seed=2)
+    store = MemorySampleStore()
+    eng = WalkEngine(g, WalkConfig(walk_length=6, window=3, episodes=2), store)
+    eng.start_async(0)
+    pairs = store.get(0, 0)  # blocks until the walker delivers
+    eng.join()
+    assert pairs.shape[0] > 0
+
+
+def test_disk_store_roundtrip(tmp_path):
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.array([[1, 2], [3, 4]], np.int32)
+    store.put(0, 0, pairs)
+    store.finish_epoch(0)
+    np.testing.assert_array_equal(np.asarray(store.get(0, 0)), pairs)
+    assert store.episodes(0) == 1
+
+
+def test_node2vec_biased_step_runs():
+    g = mesh_graph(12)
+    cfg = WalkConfig(walk_length=6, window=2, node2vec_p=0.5, node2vec_q=2.0)
+    eng = WalkEngine(g, cfg, MemorySampleStore())
+    rng = np.random.default_rng(0)
+    walks = eng.generate_walks(np.arange(50, dtype=np.int32), rng)
+    adj = {v: set(g.neighbors(v)) for v in range(g.num_nodes)}
+    for w in walks[:20]:
+        for a, b in zip(w[:-1], w[1:]):
+            assert b in adj[a] or a == b
