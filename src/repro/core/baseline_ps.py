@@ -7,7 +7,8 @@ and copied back, with **no pipeline overlap** and **all inter-GPU exchange
 bouncing through the host**. We implement the same execution structure so the
 benchmark comparison is structural, not a strawman:
 
-  * identical SGNS math (same `kernels.ops.sgns_step`),
+  * identical SGNS math (same `kernels.ops.sgns_step`, including the
+    `pallas_fused2` fully-fused update path when `cfg.impl` selects it),
   * identical 2D orthogonal-block schedule,
   * but: synchronous host round-trips for every vertex block each round,
     no ppermute, no overlap, per-round dispatch from Python.

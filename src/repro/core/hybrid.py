@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.partition import EpisodeBlocks, NodePartition
 from repro.kernels import ops
+from repro.sharding import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,20 +43,16 @@ class HybridConfig:
     reduction: str = "sum"        # word2vec-faithful; see kernels.ops.sgns_step
     subparts: int = 4             # paper's k (ping-pong sub-parts)
     neg_pool: int = 8192          # deg^0.75-sampled per-device negative pool
-    impl: str = "ref"             # kernels.ops impl: "ref" | "pallas"
+    # kernels.ops impl: "ref" | "pallas" | "pallas_fused" | "pallas_fused2".
+    # "pallas_fused2" is the pipelined fully-fused update kernel (double-
+    # buffered DMA gather + in-kernel SGD apply) — the production path on TPU.
+    impl: str = "ref"
     seed: int = 0
     # bf16 tables halve BOTH the ring-rotation bytes and the HBM footprint;
     # grads are computed in f32 inside the kernel (beyond-paper, §Perf A.3)
     dtype: str = "float32"
     # ablation switches (used by §Perf):
     fuse_subpart_permute: bool = True   # False -> one whole-shard ppermute/round
-
-
-def _axis_flat_index(axis_names: tuple[str, ...]) -> jax.Array:
-    idx = jax.lax.axis_index(axis_names[0])
-    for name in axis_names[1:]:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return idx
 
 
 def _shift_perm(n: int) -> list[tuple[int, int]]:
@@ -151,7 +148,8 @@ def build_episode_fn(mesh: Mesh, part: NodePartition, cfg: HybridConfig):
         _lr[0] = lr
 
         key = jax.random.fold_in(
-            jax.random.PRNGKey(seed[0]), _axis_flat_index(axis_names))
+            jax.random.PRNGKey(seed[0]),
+            compat.axis_flat_index(axis_names, dims))
 
         fn = model_round
         # wrap middle/outer rings (skip the innermost axis: handled per round)
@@ -177,9 +175,7 @@ def build_episode_fn(mesh: Mesh, part: NodePartition, cfg: HybridConfig):
     )
     out_specs = (all_axes, all_axes, P())
 
-    fn = jax.shard_map(
-        episode_device_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)
+    fn = compat.shard_map(episode_device_fn, mesh, in_specs, out_specs)
     shardings = {
         "table": NamedSharding(mesh, all_axes),
         "blocks": NamedSharding(mesh, P(axis_names)),

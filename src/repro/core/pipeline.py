@@ -46,4 +46,8 @@ class EpisodePipeline:
         return self._build(epoch, episode)
 
     def close(self):
-        self._pool.shutdown(wait=False)
+        """Shut down the worker, waiting for any in-flight build: a prefetch
+        racing interpreter teardown can die inside numpy with the module
+        half-unloaded. Queued-but-unstarted builds are cancelled."""
+        self._pool.shutdown(wait=True, cancel_futures=True)
+        self._next = None

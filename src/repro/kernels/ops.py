@@ -1,11 +1,21 @@
 """Public jit'd ops over the SGNS kernels.
 
 ``impl`` selects the execution path:
-  * ``"ref"``     — pure jnp (XLA). Default on CPU: fast and exact.
-  * ``"pallas"``  — Pallas kernels in interpret mode on CPU, compiled on TPU.
+  * ``"ref"``           — pure jnp (XLA). Default on CPU: fast and exact.
+  * ``"pallas"``        — separate Pallas kernels: blocked gather → grads
+                          (MXU tile kernel) → blocked scatter-add.
+  * ``"pallas_fused"``  — one kernel for DMA-gather + grads; SGD apply still
+                          runs as standalone scatter-add passes.
+  * ``"pallas_fused2"`` — the pipelined fully-fused update kernel: gather,
+                          grads, and SGD apply in a single pallas_call with
+                          the tables aliased in-place (one HBM round-trip per
+                          row; no separate scatters, no (idx_c ++ idx_n)
+                          concatenate). This is the production pallas path.
 
-`sgns_step` is the fused edge-minibatch update the hybrid trainer calls in its
-inner loop: gather → grads (MXU tile kernel) → SGD scatter-add.
+Pallas kernels run in interpret mode on CPU, compiled on TPU.
+
+`sgns_step` is the fused edge-minibatch update the hybrid trainer calls in
+its inner loop.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
 
 def sgns_grads(v, c, n, mask, *, impl: str = "ref", block_b: int = 256):
     """loss + (dv, dc, dn) for a shared-negative SGNS minibatch."""
+    _check_impl(impl, ("ref", "pallas"))
     if impl == "ref":
         return _ref.sgns_grads_ref(v, c, n, mask)
     B = v.shape[0]
@@ -46,21 +57,36 @@ def sgns_grads(v, c, n, mask, *, impl: str = "ref", block_b: int = 256):
     return loss, dv[:B], dc[:B], dn
 
 
-def gather_rows(table, idx, *, impl: str = "ref"):
+STEP_IMPLS = ("ref", "pallas", "pallas_fused", "pallas_fused2")
+
+
+def _check_impl(impl: str, allowed=STEP_IMPLS):
+    if impl not in allowed:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {allowed}")
+
+
+def gather_rows(table, idx, *, impl: str = "ref", rows_per_block: int = 8):
+    _check_impl(impl, ("ref", "pallas"))
     if impl == "ref":
         return _ref.gather_rows_ref(table, idx)
-    return _k.gather_rows(table, idx, interpret=_interpret())
+    return _k.gather_rows(table, idx, rows_per_block=rows_per_block,
+                          interpret=_interpret())
 
 
-def scatter_add_rows(table, idx, upd, *, impl: str = "ref"):
+def scatter_add_rows(table, idx, upd, *, impl: str = "ref",
+                     rows_per_block: int = 8):
+    _check_impl(impl, ("ref", "pallas"))
     if impl == "ref":
         return _ref.scatter_add_rows_ref(table, idx, upd)
-    return _k.scatter_add_rows(table, idx, upd, interpret=_interpret())
+    return _k.scatter_add_rows(table, idx, upd,
+                               rows_per_block=rows_per_block,
+                               interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "reduction"))
+@functools.partial(jax.jit,
+                   static_argnames=("impl", "reduction", "block_b"))
 def sgns_step(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *, impl: str = "ref",
-              reduction: str = "sum"):
+              reduction: str = "sum", block_b: int = 256):
     """One SGNS SGD minibatch against local (vert, ctx) shards.
 
     vert: (Nv, d), ctx: (Nc, d); idx_v/idx_c: (B,), idx_n: (S,), mask: (B,).
@@ -74,22 +100,43 @@ def sgns_step(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *, impl: str = "ref",
     under-weights positives relative to the shared negatives (degenerates; see
     EXPERIMENTS.md §Perf ablation). Default: sum.
     """
+    _check_impl(impl)
     lr_eff = lr / mask.shape[0] if reduction == "mean" else lr
     if impl == "ref":
         return _ref.sgns_step_ref(vert, ctx, idx_v, idx_c, idx_n, mask, lr_eff)
-    if impl == "pallas_fused":
-        # single kernel: DMA-gather + grads; rows never round-trip HBM
+    if impl in ("pallas_fused", "pallas_fused2"):
+        # both fused branches tile B by bb and pad with (index 0, mask 0)
+        # rows, which produce zero grads
+        B = idx_v.shape[0]
+        bb = min(block_b, B)
+        iv_p, ic_p, m_p = (_pad_to(idx_v, bb), _pad_to(idx_c, bb),
+                           _pad_to(mask, bb))
+        if impl == "pallas_fused2":
+            # fully-fused pipelined update: the kernel applies -lr*grad
+            # straight to the aliased tables — no standalone scatter passes,
+            # no (idx_c ++ idx_n) concatenate round-trip through HBM. The
+            # kernel's duplicate-combine write-back makes padded positions
+            # write row 0's correct final value.
+            return _k.sgns_fused_update(
+                vert, ctx, iv_p, ic_p, idx_n, m_p, lr_eff, block_b=bb,
+                interpret=_interpret())
+        # pallas_fused: one kernel for DMA-gather + grads (rows never
+        # round-trip HBM), then standalone scatters. Scatter the REAL rows
+        # only: padded zero-grad rows would be wasted DMAs, and their
+        # repeated index 0 would trip scatter_add_rows' duplicate check
+        # into the serialized slow path.
         loss, dv, dc, dn = _k.sgns_fused_grads(
-            vert, ctx, idx_v, idx_c, idx_n, mask, interpret=_interpret())
-        vert = scatter_add_rows(vert, idx_v, -lr_eff * dv, impl="pallas")
+            vert, ctx, iv_p, ic_p, idx_n, m_p, block_b=bb,
+            interpret=_interpret())
+        vert = scatter_add_rows(vert, idx_v, -lr_eff * dv[:B], impl="pallas")
         idx_cn = jnp.concatenate([idx_c, idx_n])
-        upd_cn = jnp.concatenate([-lr_eff * dc, -lr_eff * dn])
+        upd_cn = jnp.concatenate([-lr_eff * dc[:B], -lr_eff * dn])
         ctx = scatter_add_rows(ctx, idx_cn, upd_cn, impl="pallas")
         return vert, ctx, loss
     v = gather_rows(vert, idx_v, impl=impl)
     c = gather_rows(ctx, idx_c, impl=impl)
     n = gather_rows(ctx, idx_n, impl=impl)
-    loss, dv, dc, dn = sgns_grads(v, c, n, mask, impl=impl)
+    loss, dv, dc, dn = sgns_grads(v, c, n, mask, impl=impl, block_b=block_b)
     vert = scatter_add_rows(vert, idx_v, -lr_eff * dv, impl=impl)
     # combined ctx scatter (see ref.sgns_step_ref: keeps ctx aliasable)
     idx_cn = jnp.concatenate([idx_c, idx_n])

@@ -14,9 +14,16 @@ dot-products → scatter rows. The TPU-native rethink (DESIGN.md §6):
   HBM; scalar prefetch + per-row BlockSpec index_map is the idiom).
 
 Kernels:
-  * :func:`sgns_grads`      — dense tile kernel: loss + dv/dc/dn grads (MXU).
-  * :func:`gather_rows`     — (N,d) table × (B,) idx → (B,d), scalar prefetch.
-  * :func:`scatter_add_rows`— (N,d) table += upd at idx, aliased output.
+  * :func:`sgns_grads`        — dense tile kernel: loss + dv/dc/dn grads (MXU).
+  * :func:`sgns_fused_grads`  — DMA-gather + grads in one launch (no apply).
+  * :func:`sgns_fused_update` — the paper's full fused hot loop: pipelined
+    double-buffered gather → grads → **in-kernel SGD apply** straight back to
+    the HBM-resident tables (aliased outputs). One HBM round-trip per row.
+  * :func:`gather_rows`       — multi-row blocks, overlapped async row copies.
+  * :func:`scatter_add_rows`  — multi-row blocks; overlapped RMW when the
+    index vector is duplicate-free, serialized otherwise.
+  * ``*_rowwise``             — the original one-row-per-grid-step layouts,
+    kept as the interpret-mode reference implementations.
 
 All are validated against ``ref.py`` in interpret mode (CPU container); TPU is
 the compilation target.
@@ -32,31 +39,40 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 # --------------------------------------------------------------------------
+# shared tile math: the SGNS fwd+bwd every kernel in this file runs on the
+# MXU. One definition so a formula fix can't silently diverge the kernels.
+# --------------------------------------------------------------------------
+def _tile_grads(v, c, n, m):
+    """v, c: (Bt, d); n: (S, d); m: (Bt, 1) — all f32.
+    Returns (dv, dc, dn_tile, loss_tile) in f32."""
+    f32 = jnp.float32
+    pos = jnp.sum(v * c, axis=-1, keepdims=True)               # (Bt, 1)
+    neg = jax.lax.dot_general(v, n, (((1,), (1,)), ((), ())),
+                              preferred_element_type=f32)      # (Bt, S) MXU
+    g_pos = (jax.nn.sigmoid(pos) - 1.0) * m                    # (Bt, 1)
+    g_neg = jax.nn.sigmoid(neg) * m                            # (Bt, S)
+    dv = g_pos * c + jax.lax.dot_general(
+        g_neg, n, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    dc = g_pos * v
+    dn_tile = jax.lax.dot_general(g_neg, v, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=f32)  # (S, d)
+    loss_tile = (jnp.sum(m * jax.nn.softplus(-pos))
+                 + jnp.sum(m * jax.nn.softplus(neg)))
+    return dv, dc, dn_tile, loss_tile
+
+
+# --------------------------------------------------------------------------
 # dense SGNS grads tile kernel
 # --------------------------------------------------------------------------
 def _sgns_grads_kernel(v_ref, c_ref, n_ref, mask_ref,
                        dv_ref, dc_ref, dn_ref, loss_ref):
     i = pl.program_id(0)
-    v = v_ref[...].astype(jnp.float32)          # (Bt, d)
-    c = c_ref[...].astype(jnp.float32)          # (Bt, d)
-    n = n_ref[...].astype(jnp.float32)          # (S, d)
-    m = mask_ref[...].astype(jnp.float32)       # (Bt, 1)
-
-    pos = jnp.sum(v * c, axis=-1, keepdims=True)               # (Bt, 1)
-    neg = jax.lax.dot_general(v, n, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)  # (Bt, S) MXU
-    g_pos = (jax.nn.sigmoid(pos) - 1.0) * m                    # (Bt, 1)
-    g_neg = jax.nn.sigmoid(neg) * m                            # (Bt, S)
-
-    dv_ref[...] = (g_pos * c + jax.lax.dot_general(
-        g_neg, n, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)).astype(dv_ref.dtype)
-    dc_ref[...] = (g_pos * v).astype(dc_ref.dtype)
-
-    dn_tile = jax.lax.dot_general(g_neg, v, (((0,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.float32)  # (S, d)
-    loss_tile = (jnp.sum(m * jax.nn.softplus(-pos))
-                 + jnp.sum(m * jax.nn.softplus(neg)))
+    f32 = jnp.float32
+    dv, dc, dn_tile, loss_tile = _tile_grads(
+        v_ref[...].astype(f32), c_ref[...].astype(f32),
+        n_ref[...].astype(f32), mask_ref[...].astype(f32))
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+    dc_ref[...] = dc.astype(dc_ref.dtype)
 
     # dn and loss accumulate across the B grid (sequential on TPU).
     @pl.when(i == 0)
@@ -139,25 +155,12 @@ def _sgns_fused_kernel(iv_ref, ic_ref, in_ref, vert_ref, ctx_ref, mask_ref,
         cp.start()
         cp.wait()
 
-    v = v_s[...].astype(jnp.float32)
-    c = c_s[...].astype(jnp.float32)
-    n = n_s[...].astype(jnp.float32)
-    m = mask_ref[...].astype(jnp.float32)
-
-    pos = jnp.sum(v * c, axis=-1, keepdims=True)
-    neg = jax.lax.dot_general(v, n, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    g_pos = (jax.nn.sigmoid(pos) - 1.0) * m
-    g_neg = jax.nn.sigmoid(neg) * m
-
-    dv_ref[...] = (g_pos * c + jax.lax.dot_general(
-        g_neg, n, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)).astype(dv_ref.dtype)
-    dc_ref[...] = (g_pos * v).astype(dc_ref.dtype)
-    dn_tile = jax.lax.dot_general(g_neg, v, (((0,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.float32)
-    loss_tile = (jnp.sum(m * jax.nn.softplus(-pos))
-                 + jnp.sum(m * jax.nn.softplus(neg)))
+    f32 = jnp.float32
+    dv, dc, dn_tile, loss_tile = _tile_grads(
+        v_s[...].astype(f32), c_s[...].astype(f32), n_s[...].astype(f32),
+        mask_ref[...].astype(f32))
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+    dc_ref[...] = dc.astype(dc_ref.dtype)
 
     @pl.when(i == 0)
     def _init():
@@ -220,17 +223,265 @@ def sgns_fused_grads(vert, ctx, idx_v, idx_c, idx_n, mask, *,
 
 
 # --------------------------------------------------------------------------
-# row gather via scalar-prefetched indices
+# FULLY-FUSED pipelined update kernel (the tentpole): double-buffered DMA
+# gather → MXU tile grads → in-kernel SGD apply to the aliased HBM tables.
+#
+# Pipeline (grid step = one (bb, d) tile, sequential on TPU):
+#   step i:  start tile i+1's row gathers   (rotating sem slot (i+1) % 2)
+#            wait  tile i's   row gathers   (sem slot i % 2 — started at i-1)
+#            tile math on the MXU           (overlaps tile i+1's copies)
+#   last step: duplicate-combine + write-back (see below).
+#
+# Scatter-accumulate semantics without read-modify-write: all B rows were
+# gathered *pre-update*, so the final value of table row r is
+#   orig[r] - lr * Σ_{positions p with idx[p]==r} grad[p].
+# The per-position sums are a (B, B) equality-matrix matmul (MXU-friendly);
+# every position then writes the SAME final value for its row, so the
+# write-back is pure pipelined DMA with no RAW hazards — duplicate writes
+# race benignly (identical bytes). ctx duplicates may span idx_c and idx_n;
+# the cross blocks of the equality matrix handle that, which is also what
+# lets ops.sgns_step drop its (idx_c ++ idx_n) concatenate round-trip.
+# Padded rows (mask 0, index 0) fold in for free: their grads are zero, and
+# the combine makes them write row 0's correct final value.
 # --------------------------------------------------------------------------
-def _gather_kernel(idx_ref, table_ref, out_ref):
+_NWRITE = 4   # write-back semaphore ring depth (max outstanding row writes)
+
+
+def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
+                        vert_hbm, ctx_hbm, ivv_ref, icv_ref, inv_ref,
+                        mask_ref, lr_ref,
+                        vert_out, ctx_out, loss_ref,
+                        v_s, c_s, n_s, dv_s, dc_s, dn_s,
+                        gsem, nsem, wsem):
+    i = pl.program_id(0)
+    T = pl.num_programs(0)
+    B, d = v_s.shape
+    bb = mask_ref.shape[0]
+    S = n_s.shape[0]
+    f32 = jnp.float32
+
+    def tile_copies(t, op):
+        """start/wait the 2*bb row DMAs of tile t on sem slot t % 2."""
+        def body(j, _):
+            r = t * bb + j
+            getattr(pltpu.make_async_copy(
+                vert_hbm.at[iv_ref[r]], v_s.at[r], gsem.at[t % 2]), op)()
+            getattr(pltpu.make_async_copy(
+                ctx_hbm.at[ic_ref[r]], c_s.at[r], gsem.at[t % 2]), op)()
+            return 0
+        jax.lax.fori_loop(0, bb, body, 0)
+
+    @pl.when(i == 0)
+    def _prologue():
+        # shared negatives: start first so they overlap tile 0's gathers
+        def nstart(s, _):
+            pltpu.make_async_copy(ctx_hbm.at[in_ref[s]], n_s.at[s],
+                                  nsem).start()
+            return 0
+        jax.lax.fori_loop(0, S, nstart, 0)
+        tile_copies(0, "start")
+        def nwait(s, _):
+            pltpu.make_async_copy(ctx_hbm.at[in_ref[s]], n_s.at[s],
+                                  nsem).wait()
+            return 0
+        jax.lax.fori_loop(0, S, nwait, 0)
+
+    @pl.when(i + 1 < T)
+    def _prefetch_next():          # double buffering: next tile's DMAs fly
+        tile_copies(i + 1, "start")   # while this tile computes
+
+    tile_copies(i, "wait")
+
+    dv, dc, dn_tile, loss_tile = _tile_grads(
+        v_s[pl.ds(i * bb, bb), :].astype(f32),
+        c_s[pl.ds(i * bb, bb), :].astype(f32),
+        n_s[...].astype(f32), mask_ref[...].astype(f32))
+    dv_s[pl.ds(i * bb, bb), :] = dv
+    dc_s[pl.ds(i * bb, bb), :] = dc
+
+    @pl.when(i == 0)
+    def _init():
+        dn_s[...] = jnp.zeros_like(dn_s)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    dn_s[...] += dn_tile
+    loss_ref[...] += loss_tile
+
+    @pl.when(i == T - 1)
+    def _apply():
+        lr = lr_ref[0, 0]
+        iv = ivv_ref[...]                                    # (B, 1) i32
+        ic = icv_ref[...]
+        inn = inv_ref[...]                                   # (S, 1) i32
+        dot = functools.partial(jax.lax.dot_general,
+                                preferred_element_type=f32)
+        # duplicate-combine: position-level grad sums per table row
+        eq_vv = (iv == iv.reshape(1, B)).astype(f32)         # (B, B)
+        dvsum = dot(eq_vv, dv_s[...], (((1,), (0,)), ((), ())))
+        eq_cc = (ic == ic.reshape(1, B)).astype(f32)         # (B, B)
+        eq_cn = (ic == inn.reshape(1, S)).astype(f32)        # (B, S)
+        eq_nn = (inn == inn.reshape(1, S)).astype(f32)       # (S, S)
+        dcsum = (dot(eq_cc, dc_s[...], (((1,), (0,)), ((), ())))
+                 + dot(eq_cn, dn_s[...], (((1,), (0,)), ((), ()))))
+        dnsum = (dot(eq_cn, dc_s[...], (((0,), (0,)), ((), ())))
+                 + dot(eq_nn, dn_s[...], (((1,), (0,)), ((), ()))))
+        # in-place SGD (update cast to table dtype first, like the ref's
+        # scatter-add of a cast update)
+        v_s[...] = v_s[...] + (-lr * dvsum).astype(v_s.dtype)
+        c_s[...] = c_s[...] + (-lr * dcsum).astype(c_s.dtype)
+        n_s[...] = n_s[...] + (-lr * dnsum).astype(n_s.dtype)
+
+        def write_rows(src, idx_sref, tbl_out, count):
+            """Pipelined row write-back: semaphore ring, _NWRITE in flight."""
+            def body(p, _):
+                @pl.when(p >= _NWRITE)
+                def _retire():
+                    q = p - _NWRITE
+                    pltpu.make_async_copy(
+                        src.at[q], tbl_out.at[idx_sref[q]],
+                        wsem.at[q % _NWRITE]).wait()
+                pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
+                                      wsem.at[p % _NWRITE]).start()
+                return 0
+            jax.lax.fori_loop(0, count, body, 0)
+            for p in range(max(0, count - _NWRITE), count):   # drain
+                pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
+                                      wsem.at[p % _NWRITE]).wait()
+
+        write_rows(v_s, iv_ref, vert_out, B)
+        write_rows(c_s, ic_ref, ctx_out, B)
+        write_rows(n_s, in_ref, ctx_out, S)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_fused_update(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *,
+                      block_b: int = 256, interpret: bool = False):
+    """One fully-fused SGNS SGD minibatch: gather + grads + apply in a single
+    pallas_call with the tables aliased input→output.
+
+    vert: (Nv, d); ctx: (Nc, d) (same dtype); idx_v/idx_c: (B,); idx_n: (S,);
+    mask: (B,); lr: scalar. B must be a multiple of min(block_b, B) —
+    ops.sgns_step pads. Returns (vert', ctx', loss).
+    """
+    B = idx_v.shape[0]
+    d = vert.shape[1]
+    S = idx_n.shape[0]
+    assert vert.dtype == ctx.dtype, (vert.dtype, ctx.dtype)
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    f32 = jnp.float32
+    iv32 = idx_v.astype(jnp.int32)
+    ic32 = idx_c.astype(jnp.int32)
+    in32 = idx_n.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),            # vert (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),            # ctx (HBM)
+            pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),      # idx_v as vector
+            pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),      # idx_c as vector
+            pl.BlockSpec((S, 1), lambda i, *_: (0, 0)),      # idx_n as vector
+            pl.BlockSpec((bb, 1), lambda i, *_: (i, 0)),     # mask tile
+            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),      # lr
+        ],
+        out_specs=(
+            pl.BlockSpec(memory_space=pltpu.ANY),            # vert' (aliased)
+            pl.BlockSpec(memory_space=pltpu.ANY),            # ctx'  (aliased)
+            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),      # loss (accum)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((B, d), vert.dtype),                  # v_s
+            pltpu.VMEM((B, d), ctx.dtype),                   # c_s
+            pltpu.VMEM((S, d), ctx.dtype),                   # n_s
+            pltpu.VMEM((B, d), f32),                         # dv_s
+            pltpu.VMEM((B, d), f32),                         # dc_s
+            pltpu.VMEM((S, d), f32),                         # dn_s
+            pltpu.SemaphoreType.DMA((2,)),                   # gather (rotating)
+            pltpu.SemaphoreType.DMA,                         # negatives
+            pltpu.SemaphoreType.DMA((_NWRITE,)),             # write-back ring
+        ],
+    )
+    vert2, ctx2, loss = pl.pallas_call(
+        _sgns_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct(vert.shape, vert.dtype),
+            jax.ShapeDtypeStruct(ctx.shape, ctx.dtype),
+            jax.ShapeDtypeStruct((1, 1), f32),
+        ),
+        # operands 0..2 are the scalar-prefetch index vectors.
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(iv32, ic32, in32, vert, ctx,
+      iv32.reshape(B, 1), ic32.reshape(B, 1), in32.reshape(S, 1),
+      mask.reshape(B, 1), jnp.asarray(lr, f32).reshape(1, 1))
+    return vert2, ctx2, loss[0, 0]
+
+
+# --------------------------------------------------------------------------
+# row gather: multi-row blocks, overlapped async copies (all of a block's
+# row DMAs are in flight before the first wait)
+# --------------------------------------------------------------------------
+def _gather_block_kernel(idx_ref, table_ref, out_ref, sem, *, valid: int):
+    i = pl.program_id(0)
+    rb = out_ref.shape[0]
+    # padded tail rows (global index >= valid) are discarded by the caller's
+    # out[:B] slice — skip their DMAs entirely
+
+    def start(j, _):
+        @pl.when(i * rb + j < valid)
+        def _():
+            pltpu.make_async_copy(table_ref.at[idx_ref[i * rb + j]],
+                                  out_ref.at[j], sem.at[j]).start()
+        return 0
+    jax.lax.fori_loop(0, rb, start, 0)
+
+    def wait(j, _):
+        @pl.when(i * rb + j < valid)
+        def _():
+            pltpu.make_async_copy(table_ref.at[idx_ref[i * rb + j]],
+                                  out_ref.at[j], sem.at[j]).wait()
+        return 0
+    jax.lax.fori_loop(0, rb, wait, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def gather_rows(table, idx, *, rows_per_block: int = 8,
+                interpret: bool = False):
+    """(N, d) table, (B,) int32 → (B, d). One grid step per `rows_per_block`
+    rows; each block's HBM→VMEM row copies are all started before any wait,
+    so the DMAs overlap each other (and the previous block's writeout)."""
+    B = idx.shape[0]
+    N, d = table.shape
+    rb = min(rows_per_block, B)
+    Bp = -(-B // rb) * rb
+    idx_p = jnp.pad(idx.astype(jnp.int32), (0, Bp - B))  # pad rows: no DMA
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Bp // rb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],    # table (HBM)
+        out_specs=pl.BlockSpec((rb, d), lambda i, idx: (i, 0)),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((rb,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_block_kernel, valid=B),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, d), table.dtype),
+        interpret=interpret,
+    )(idx_p, table)
+    return out[:B]
+
+
+def _gather_rowwise_kernel(idx_ref, table_ref, out_ref):
     del idx_ref  # consumed by the index_map
     out_ref[...] = table_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def gather_rows(table, idx, *, interpret: bool = False):
-    """(N, d) table, (B,) int32 → (B, d). One grid step per row; the row
-    address comes from the scalar-prefetched index vector (HBM→VMEM DMA)."""
+def gather_rows_rowwise(table, idx, *, interpret: bool = False):
+    """Original one-row-per-grid-step gather, kept as the interpret-mode
+    reference for :func:`gather_rows`."""
     B = idx.shape[0]
     N, d = table.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -240,7 +491,7 @@ def gather_rows(table, idx, *, interpret: bool = False):
         out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
     )
     return pl.pallas_call(
-        _gather_kernel,
+        _gather_rowwise_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
         interpret=interpret,
@@ -248,18 +499,128 @@ def gather_rows(table, idx, *, interpret: bool = False):
 
 
 # --------------------------------------------------------------------------
-# row scatter-add (aliased in/out, sequential grid ⇒ duplicates accumulate)
+# row scatter-add: multi-row blocks. When the (padded) index vector has no
+# duplicates the block's reads all overlap, the adds vectorize, and the
+# writes all overlap; with duplicates we fall back to serialized per-row
+# read-modify-write (the only order that accumulates correctly).
 # --------------------------------------------------------------------------
-def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref):
+def _scatter_add_block_kernel(idx_ref, dup_ref, table_ref, upd_ref, out_ref,
+                              row_s, sem, *, valid: int):
+    del table_ref  # aliased: current rows are read through out_ref
+    i = pl.program_id(0)
+    rb = upd_ref.shape[0]
+    # padded tail rows (global index >= valid) do no DMA at all, so padding
+    # neither races real row updates nor forces the serialized path
+
+    @pl.when(dup_ref[0] == 0)
+    def _overlapped():
+        def rstart(j, _):
+            @pl.when(i * rb + j < valid)
+            def _():
+                pltpu.make_async_copy(out_ref.at[idx_ref[i * rb + j]],
+                                      row_s.at[j], sem.at[j]).start()
+            return 0
+        jax.lax.fori_loop(0, rb, rstart, 0)
+        def rwait(j, _):
+            @pl.when(i * rb + j < valid)
+            def _():
+                pltpu.make_async_copy(out_ref.at[idx_ref[i * rb + j]],
+                                      row_s.at[j], sem.at[j]).wait()
+            return 0
+        jax.lax.fori_loop(0, rb, rwait, 0)
+        row_s[...] = row_s[...] + upd_ref[...].astype(row_s.dtype)
+        def wstart(j, _):
+            @pl.when(i * rb + j < valid)
+            def _():
+                pltpu.make_async_copy(row_s.at[j],
+                                      out_ref.at[idx_ref[i * rb + j]],
+                                      sem.at[j]).start()
+            return 0
+        jax.lax.fori_loop(0, rb, wstart, 0)
+        def wwait(j, _):
+            @pl.when(i * rb + j < valid)
+            def _():
+                pltpu.make_async_copy(row_s.at[j],
+                                      out_ref.at[idx_ref[i * rb + j]],
+                                      sem.at[j]).wait()
+            return 0
+        jax.lax.fori_loop(0, rb, wwait, 0)
+
+    @pl.when(dup_ref[0] != 0)
+    def _serialized():
+        def body(j, _):
+            @pl.when(i * rb + j < valid)
+            def _():
+                r = idx_ref[i * rb + j]
+                cp = pltpu.make_async_copy(out_ref.at[r], row_s.at[0],
+                                           sem.at[0])
+                cp.start()
+                cp.wait()
+                row_s[0, :] = row_s[0, :] + upd_ref[j, :].astype(row_s.dtype)
+                cp = pltpu.make_async_copy(row_s.at[0], out_ref.at[r],
+                                           sem.at[0])
+                cp.start()
+                cp.wait()
+            return 0
+        jax.lax.fori_loop(0, rb, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def scatter_add_rows(table, idx, upd, *, rows_per_block: int = 8,
+                     interpret: bool = False):
+    """table[idx[i]] += upd[i] (duplicates accumulate), `rows_per_block` rows
+    per grid step. A host-side duplicate check (sorted-adjacent compare)
+    selects the overlapped fast path or the serialized RMW path."""
+    B = idx.shape[0]
+    N, d = table.shape
+    rb = min(rows_per_block, B)
+    Bp = -(-B // rb) * rb
+    idx32 = idx.astype(jnp.int32)
+    idx_p = jnp.pad(idx32, (0, Bp - B))   # pad rows are skipped in-kernel
+    upd_p = _pad_rows(upd, Bp)
+    # duplicate check over the REAL indices only (sorted-adjacent compare)
+    srt = jnp.sort(idx32)
+    dup = jnp.any(srt[1:] == srt[:-1]).astype(jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bp // rb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),            # table: alias
+            pl.BlockSpec((rb, d), lambda i, *_: (i, 0)),     # upd block
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((rb, d), table.dtype),
+            pltpu.SemaphoreType.DMA((rb,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_add_block_kernel, valid=B),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, d), table.dtype),
+        # operands 0/1 are the scalar-prefetch idx/dup; operand 2 is `table`.
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx_p, dup, table, upd_p)
+
+
+def _pad_rows(x, n_rows):
+    pad = n_rows - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def _scatter_add_rowwise_kernel(idx_ref, table_ref, upd_ref, out_ref):
     del idx_ref, table_ref  # table is aliased to out; its rows arrive in out_ref
     out_ref[...] += upd_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def scatter_add_rows(table, idx, upd, *, interpret: bool = False):
-    """table[idx[i]] += upd[i]. The table is aliased input→output; the TPU
-    grid is sequential, so revisiting a row reads the previously written
-    block (read-modify-write semantics)."""
+def scatter_add_rows_rowwise(table, idx, upd, *, interpret: bool = False):
+    """Original one-row-per-grid-step scatter-add (aliased input→output;
+    sequential grid ⇒ duplicates accumulate), kept as the interpret-mode
+    reference for :func:`scatter_add_rows`."""
     B = idx.shape[0]
     N, d = table.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -272,7 +633,7 @@ def scatter_add_rows(table, idx, upd, *, interpret: bool = False):
         out_specs=pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0)),
     )
     return pl.pallas_call(
-        _scatter_add_kernel,
+        _scatter_add_rowwise_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N, d), table.dtype),
         # operand 0 is the scalar-prefetch idx; operand 1 is `table`.

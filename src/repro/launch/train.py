@@ -52,7 +52,8 @@ def train_embedding(args):
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     cfg = HybridConfig(dim=args.dim, minibatch=SMALL.minibatch,
                        negatives=SMALL.negatives, subparts=args.subparts,
-                       neg_pool=SMALL.neg_pool, lr=args.lr, seed=args.seed)
+                       neg_pool=SMALL.neg_pool, lr=args.lr, seed=args.seed,
+                       impl=args.impl)
     trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
                                      degrees=g.degrees())
     trainer.init_embeddings()
@@ -64,6 +65,22 @@ def train_embedding(args):
 
     engine = WalkEngine(g, wcfg, store)
     engine.start_async(0)
+    try:
+        _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store,
+                                pipe, test_e, neg_e)
+    finally:
+        # always drain the prefetch worker: an in-flight build racing
+        # interpreter teardown (e.g. after a KeyboardInterrupt) can crash
+        # inside numpy after module unload
+        pipe.close()
+
+
+def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
+                            test_e, neg_e):
+    from repro.core import eval as ev
+    from repro.train.checkpoint import save_checkpoint
+    from repro.walk import WalkEngine
+
     for epoch in range(args.epochs):
         engine.join()
         if epoch + 1 < args.epochs:  # paper: walks for e+1 overlap training e
@@ -94,7 +111,6 @@ def train_embedding(args):
                                    "context": trainer.context_embeddings()},
                             step=epoch + 1)
             print(f"  checkpoint -> {path}")
-    pipe.close()
 
 
 def train_lm(args):
@@ -158,6 +174,13 @@ def main():
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--episodes", type=int, default=4)
     ap.add_argument("--subparts", type=int, default=4)
+    # literal copy of kernels.ops.STEP_IMPLS: importing ops here would pull
+    # jax into --help / arg-error paths (this module defers jax on purpose);
+    # a stale copy fails loudly anyway (ops validates impl at trace time)
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "pallas", "pallas_fused",
+                             "pallas_fused2"],
+                    help="kernels.ops execution path for the episode step")
     ap.add_argument("--ckpt-every", type=int, default=5)
     # lm mode
     ap.add_argument("--reduced", action="store_true")

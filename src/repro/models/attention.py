@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.models.common import apply_rope, dense_init, rms_norm
 from repro.models.config import ModelConfig
+from repro.sharding import compat
 
 NEG_INF = -1e30
 
@@ -88,13 +89,11 @@ def _seq_parallel_attention(q, k, v, positions, kv_pos, cfg: ModelConfig,
         return out.swapaxes(0, 1).reshape(b, nq * q_chunk,
                                           *out.shape[3:])[:, :Sl]
 
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(bspec, "model", None, None), P(bspec, None, None, None),
-                  P(bspec, None, None, None), P(bspec, "model"),
-                  P(bspec, None)),
-        out_specs=P(bspec, "model", None, None),
-        check_vma=False)(q, k, v, positions, kv_pos)
+    return compat.shard_map(
+        body, mesh,
+        (P(bspec, "model", None, None), P(bspec, None, None, None),
+         P(bspec, None, None, None), P(bspec, "model"), P(bspec, None)),
+        P(bspec, "model", None, None))(q, k, v, positions, kv_pos)
 
 
 # --------------------------------------------------------------------------

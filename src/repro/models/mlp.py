@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense_init
 from repro.models.config import ModelConfig
+from repro.sharding import compat
 
 
 # --------------------------------------------------------------------------
@@ -99,7 +100,7 @@ def _aux_loss(probs, gates, cfg: ModelConfig):
     return E * jnp.sum(frac * pbar)
 
 
-def _device_moe(params, x, cfg: ModelConfig, ep_axes,
+def _device_moe(params, x, cfg: ModelConfig, ep_axes, ep_sizes,
                 quota: int | None = None):
     """Per-device body of the expert-parallel MoE (inside shard_map).
 
@@ -107,14 +108,13 @@ def _device_moe(params, x, cfg: ModelConfig, ep_axes,
     too short to slice over "model" (decode), x arrives replicated and
     ``quota`` assigns each rank a disjoint token range instead.
     params["w_*"]: (E_loc, ...) — this device's experts.
+    ep_sizes: static mesh extents of ``ep_axes`` (jax.lax.axis_size is
+    missing on older jax, and these must be python ints anyway).
     """
-    sizes = [jax.lax.axis_size(a) for a in ep_axes]
     M = 1
-    for n in sizes:
+    for n in ep_sizes:
         M *= n
-    m_idx = jax.lax.axis_index(ep_axes[0])
-    for a in ep_axes[1:]:
-        m_idx = m_idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    m_idx = compat.axis_flat_index(ep_axes, ep_sizes)
     E_loc = params["w_gate"].shape[0]
     E = E_loc * M
     k = cfg.moe_top_k
@@ -240,8 +240,10 @@ def moe_forward(params, x, cfg: ModelConfig, *, mesh=None,
         quota = max(1, -(-(B_loc * S) // ep_size))
         pspec_x = P(b_axes or None, None, None)
 
+    ep_sizes = tuple(mesh.shape[a] for a in ep_axes)
+
     def body(params, x):
-        y, aux = _device_moe(params, x, cfg, ep_axes, quota=quota)
+        y, aux = _device_moe(params, x, cfg, ep_axes, ep_sizes, quota=quota)
         if quota is not None:
             y = jax.lax.psum(y, model_axis)
         return y, jax.lax.pmean(aux, (*data_axes, model_axis))
@@ -257,12 +259,10 @@ def moe_forward(params, x, cfg: ModelConfig, *, mesh=None,
 
     shared_y = ffn_forward(params["shared"], x) if "shared" in params else None
 
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=({k: pspec_params[k] for k in params if k != "shared"},
-                  pspec_x),
-        out_specs=(pspec_x, P()),
-        check_vma=False,
+    y, aux = compat.shard_map(
+        body, mesh,
+        ({k: pspec_params[k] for k in params if k != "shared"}, pspec_x),
+        (pspec_x, P()),
     )({k: v for k, v in params.items() if k != "shared"}, x)
     if shared_y is not None:
         y = y + shared_y

@@ -113,6 +113,114 @@ def test_sgns_step_fused_path():
     np.testing.assert_allclose(c0, c1, rtol=2e-4, atol=1e-6)
 
 
+def _step_inputs(Nv, Nc, B, S, d, dtype=jnp.float32, kbase=60, dup=False):
+    vert, ctx = _rand((Nv, d), k=kbase, dtype=dtype), _rand((Nc, d),
+                                                            k=kbase + 1,
+                                                            dtype=dtype)
+    iv = jax.random.randint(jax.random.fold_in(KEY, kbase + 2), (B,), 0, Nv)
+    ic = jax.random.randint(jax.random.fold_in(KEY, kbase + 3), (B,), 0, Nc)
+    inn = jax.random.randint(jax.random.fold_in(KEY, kbase + 4), (S,), 0, Nc)
+    if dup:
+        # force heavy duplication: vertex 3 and context 5 repeat across the
+        # batch, and a negative collides with a positive context row
+        iv = iv.at[::3].set(3)
+        ic = ic.at[::4].set(5)
+        inn = inn.at[0].set(5)
+    mask = (jax.random.uniform(jax.random.fold_in(KEY, kbase + 5), (B,))
+            > 0.15).astype(jnp.float32)
+    return vert, ctx, iv, ic, inn, mask
+
+
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    (jnp.float32, 2e-4, 1e-6),
+    # ref applies updates in bf16 sequentially; the fused kernel combines
+    # duplicates in f32 then applies once — bf16 rounding differs
+    (jnp.bfloat16, 3e-2, 3e-3),
+])
+@pytest.mark.parametrize("dup", [False, True])
+def test_sgns_fused_update_matches_step_ref(dtype, rtol, atol, dup):
+    """The fully-fused pipelined update kernel (gather + grads + in-kernel
+    SGD apply) against the full sgns_step oracle: loss AND updated tables."""
+    Nv, Nc, d, B, S = 70, 90, 64, 64, 8
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, dtype,
+                                                dup=dup)
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ref.sgns_step_ref(vert, ctx, iv, ic, inn, mask, lr)
+    v1, c1, l1 = sgns.sgns_fused_update(vert, ctx, iv, ic, inn, mask, lr,
+                                        block_b=16, interpret=True)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0, np.float32),
+                               np.asarray(v1, np.float32), rtol=rtol,
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(c0, np.float32),
+                               np.asarray(c1, np.float32), rtol=rtol,
+                               atol=atol)
+
+
+@pytest.mark.parametrize("impl", ["pallas_fused", "pallas_fused2"])
+@pytest.mark.parametrize("B,block_b", [(37, 8), (97, 32), (64, 64), (5, 256)])
+def test_sgns_step_fused_odd_batch(impl, B, block_b):
+    """Both fused branches pad odd B to the block size; the padded (index 0,
+    mask 0) rows must not corrupt row 0."""
+    Nv, Nc, d, S = 40, 50, 32, 4
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=70)
+    iv = iv.at[0].set(0)   # make row 0 a real update target too
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr, impl="ref")
+    v1, c1, l1 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr,
+                               impl=impl, block_b=block_b)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=2e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=2e-4,
+                               atol=1e-6)
+
+
+def test_sgns_step_fused2_duplicate_scatter_accumulate():
+    """Duplicate idx_v / idx_c (and idx_c∩idx_n collisions) must accumulate
+    like the oracle's scatter-add — this is what verifies the fused branch
+    needs no standalone scatter passes."""
+    Nv, Nc, d, B, S = 30, 35, 32, 48, 8
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=80,
+                                                dup=True)
+    lr = jnp.float32(0.1)
+    v0, c0, l0 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr, impl="ref")
+    v1, c1, l1 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr,
+                               impl="pallas_fused2", block_b=16)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=3e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=3e-4,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("N,d,B,rb", [(50, 64, 20, 8), (30, 32, 9, 4),
+                                      (64, 128, 64, 16)])
+def test_gather_rows_blocked_matches_rowwise(N, d, B, rb):
+    tbl = _rand((N, d), k=90)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 91), (B,), 0, N)
+    blocked = sgns.gather_rows(tbl, idx, rows_per_block=rb, interpret=True)
+    rowwise = sgns.gather_rows_rowwise(tbl, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(blocked), np.asarray(rowwise))
+
+
+@pytest.mark.parametrize("dup", [False, True])
+@pytest.mark.parametrize("rb", [4, 8])
+def test_scatter_add_rows_blocked_matches_rowwise(dup, rb):
+    N, d, B = 40, 64, 30   # B deliberately not a multiple of rb
+    tbl = _rand((N, d), k=92)
+    if dup:
+        idx = jnp.zeros(B, jnp.int32).at[B // 2:].set(3)
+    else:
+        idx = jnp.asarray(np.random.default_rng(1).permutation(N)[:B])
+    upd = _rand((B, d), k=93)
+    blocked = sgns.scatter_add_rows(tbl, idx, upd, rows_per_block=rb,
+                                    interpret=True)
+    rowwise = sgns.scatter_add_rows_rowwise(tbl, idx, upd, interpret=True)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(rowwise),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_sgns_grads_is_true_gradient():
     """dv/dc/dn must equal autodiff gradients of the SGNS loss."""
     B, d, S = 32, 16, 8
