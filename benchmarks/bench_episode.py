@@ -1,0 +1,154 @@
+"""Episode-level benchmark: whole-episode samples/sec through core.hybrid.
+
+GraphVite and PyTorch-BigGraph both report bucket/episode throughput — not
+single-kernel microbenchmarks — as the number that matters at scale, and the
+paper's 3-minute epochs are an episode-level claim. This harness times
+``HybridEmbeddingTrainer.train_episode`` (ring rotation + sub-part pipeline
++ minibatch scan, i.e. everything a production step runs) over a sweep of
+(impl, minibatch B, dim d, mesh shape) and APPENDS a timestamped run to
+``BENCH_episode.json``, so every future perf PR moves an end-to-end number.
+
+On this CPU container the Pallas impls run in interpret mode and multi-
+device meshes are XLA host devices — absolute numbers are only comparable
+across PRs on the same container; on TPU the same harness measures the real
+thing.
+
+    PYTHONPATH=src python benchmarks/bench_episode.py          # full sweep
+    PYTHONPATH=src python benchmarks/bench_episode.py --smoke  # CI canary
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# mesh-shape sweeps need >1 device on the CPU container; must be set before
+# the first jax import
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FLAG}=2")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+
+from repro.core import (HybridConfig, HybridEmbeddingTrainer,   # noqa: E402
+                        build_episode_blocks)
+
+IMPLS = ("ref", "pallas", "pallas_fused2")
+
+# (B, d): shared-negative minibatch rows x embedding dim
+FULL_SHAPES = [(64, 64), (64, 128), (128, 128)]
+SMOKE_SHAPES = [(32, 32)]
+MESHES = [(1, 1), (1, 2)]
+
+
+def bench_one(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
+              samples: int, episodes: int, dtype: str, seed: int = 0):
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    cfg = HybridConfig(dim=d, minibatch=B, negatives=8, subparts=2,
+                       neg_pool=2048, impl=impl, dtype=dtype, seed=seed)
+    trainer = HybridEmbeddingTrainer(nodes, mesh, cfg)
+    trainer.init_embeddings()
+    rng = np.random.default_rng(seed)
+    pairs = rng.integers(0, nodes, size=(samples, 2), dtype=np.int64)
+    eb = build_episode_blocks(pairs, trainer.part, pad_multiple=B)
+    n_samples = int(eb.counts.sum())
+    trainer.train_episode(eb)            # compile + warm up
+    t0 = time.perf_counter()
+    loss = 0.0
+    for _ in range(episodes):
+        loss = trainer.train_episode(eb)  # float() inside = full sync
+    dt = (time.perf_counter() - t0) / episodes
+    return {
+        "impl": impl,
+        "B": B,
+        "d": d,
+        "mesh": list(mesh_shape),
+        "episode_s": dt,
+        "samples_per_episode": n_samples,
+        "samples_per_s": n_samples / dt,
+        "loss": loss,                     # cross-impl sanity signal
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / single mesh (CI regression canary)")
+    ap.add_argument("--episodes", type=int, default=None)
+    ap.add_argument("--nodes", type=int, default=None)
+    ap.add_argument("--samples", type=int, default=None)
+    ap.add_argument("--impls", default=",".join(IMPLS))
+    # f32 default on purpose (NOT the HybridConfig bf16 default): CPU XLA
+    # emulates bf16 ~30x slower, which would drown the structural
+    # comparison this trajectory exists for; pass --dtype bfloat16 on TPU
+    # where it's native
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_episode.json"))
+    args = ap.parse_args()
+
+    shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
+    meshes = MESHES[:1] if args.smoke else MESHES
+    nodes = args.nodes or (512 if args.smoke else 2048)
+    samples = args.samples or (512 if args.smoke else 8192)
+    episodes = args.episodes or (1 if args.smoke else 2)
+    impls = tuple(args.impls.split(","))
+
+    results = []
+    for mesh_shape in meshes:
+        for (B, d) in shapes:
+            for impl in impls:
+                r = bench_one(impl, B, d, mesh_shape, nodes=nodes,
+                              samples=samples, episodes=episodes,
+                              dtype=args.dtype)
+                results.append(r)
+                print(f"mesh={mesh_shape} B={B:4d} d={d:4d} {impl:14s} "
+                      f"{r['samples_per_s']:10.1f} samples/s   "
+                      f"({r['episode_s']*1e3:8.1f} ms/episode)")
+
+    # the episode-level claim every perf PR must not regress: the fully
+    # fused update path at least matches the separate-kernels pallas path
+    by_key = {}
+    for r in results:
+        by_key.setdefault((tuple(r["mesh"]), r["B"], r["d"]), {})[
+            r["impl"]] = r["samples_per_s"]
+    for key, v in by_key.items():
+        if "pallas" in v and "pallas_fused2" in v:
+            if v["pallas_fused2"] < v["pallas"]:
+                print(f"WARNING: fused2 slower than pallas at {key}: "
+                      f"{v['pallas_fused2']:.1f} < {v['pallas']:.1f}")
+
+    run = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "dtype": args.dtype,
+        "nodes": nodes,
+        "samples": samples,
+        "episodes_timed": episodes,
+        "note": ("end-to-end episode step (ring rotation + sub-part "
+                 "pipeline + minibatch scan); interpret-mode pallas on "
+                 "CPU — compare across PRs on the same container, "
+                 "absolute numbers on TPU"),
+        "results": results,
+    }
+    from bench_kernels import load_runs
+    runs = load_runs(args.out)
+    runs.append(run)
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "sgns_episode", "runs": runs}, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)} "
+          f"(run {len(runs)}, {len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

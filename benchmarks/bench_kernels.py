@@ -1,12 +1,14 @@
 """SGNS kernel microbenchmark: the per-PR performance trajectory.
 
-Sweeps ``ops.sgns_step`` over (B, d, S, block_b) for every impl and writes
-``BENCH_kernels.json`` with rows/s, a bytes-moved model, and the roofline
-bound from ``launch/roofline.py`` (see benchmarks/README.md for the field
-reference). On this CPU container the Pallas impls run in interpret mode —
-Python-slow, so their absolute numbers only track *relative* regressions in
-kernel structure; the ``ref`` impl numbers and the roofline bound are the
-meaningful trajectory. On TPU the same harness measures the real thing.
+Sweeps ``ops.sgns_step`` over (B, d, S, block_b) for every impl and APPENDS
+a timestamped run to ``BENCH_kernels.json`` (so the roofline trajectory is
+an actual trajectory across PRs) with rows/s, a bytes-moved model, and the
+roofline bound from ``launch/roofline.py`` (see benchmarks/README.md for
+the field reference). On this CPU container the Pallas impls run in
+interpret mode — Python-slow, so their absolute numbers only track
+*relative* regressions in kernel structure; the ``ref`` impl numbers and
+the roofline bound are the meaningful trajectory. On TPU the same harness
+measures the real thing.
 
     PYTHONPATH=src python benchmarks/bench_kernels.py          # full sweep
     PYTHONPATH=src python benchmarks/bench_kernels.py --smoke  # CI: 1 shape
@@ -38,6 +40,9 @@ FULL_SHAPES = [
     (128, 128, 16, 64),
     (256, 128, 32, 128),
     (512, 256, 32, 128),
+    # past the old (B, B) equality-matrix wall: pallas_fused2 runs the
+    # sort-based segment-sum combine here (ops.plan_fused_update)
+    (2048, 128, 16, 256),
 ]
 SMOKE_SHAPES = [
     (32, 32, 8, 16),
@@ -155,8 +160,9 @@ def main():
             assert abs(lv - losses["ref"]) <= 1e-3 * max(1.0, abs(
                 losses["ref"])), (impl, lv, losses["ref"])
 
-    payload = {
-        "benchmark": "sgns_kernels",
+    run = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": args.smoke,
         "backend": jax.default_backend(),
         "interpret_mode": interpret,
         "dtype": "float32",
@@ -166,9 +172,32 @@ def main():
                  "absolute pallas timings only on TPU"),
         "results": results,
     }
+    runs = load_runs(args.out)
+    runs.append(run)
     with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {os.path.abspath(args.out)} ({len(results)} rows)")
+        json.dump({"benchmark": "sgns_kernels", "runs": runs}, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)} "
+          f"(run {len(runs)}, {len(results)} rows)")
+
+
+def load_runs(path: str) -> list:
+    """Existing runs from the trajectory file; migrates the PR-1 era
+    single-run layout (top-level 'results') into runs[0]."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    if isinstance(old, dict) and isinstance(old.get("runs"), list):
+        return old["runs"]
+    if isinstance(old, dict) and "results" in old:   # legacy single run
+        old.pop("benchmark", None)
+        old.setdefault("timestamp", None)
+        old.setdefault("smoke", False)
+        return [old]
+    return []
 
 
 if __name__ == "__main__":

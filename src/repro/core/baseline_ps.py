@@ -51,9 +51,10 @@ class ParameterServerTrainer:
         self.counters = PSCounters()
         rng = np.random.default_rng(cfg.seed)
         d = cfg.dim
+        dt = np.dtype(cfg.dtype)     # same table dtype as the hybrid trainer
         self.vert = ((rng.random((self.part.padded_num_nodes, d),
-                                 dtype=np.float32) - 0.5) / d)
-        self.ctx = np.zeros((self.part.padded_num_nodes, d), np.float32)
+                                 dtype=np.float32) - 0.5) / d).astype(dt)
+        self.ctx = np.zeros((self.part.padded_num_nodes, d), dt)
         self._pool = self._build_pool(degrees)
         self._block_fn = self._make_block_fn()
 
@@ -91,7 +92,8 @@ class ParameterServerTrainer:
                 mask = ((off + jnp.arange(mb, dtype=jnp.int32)) < cnt).astype(v.dtype)
                 v, c, loss = ops.sgns_step(v, c, blk_mb[:, 0], blk_mb[:, 1],
                                            idx_n, mask, lr, impl=cfg.impl,
-                                           reduction=cfg.reduction)
+                                           reduction=cfg.reduction,
+                                           block_b=cfg.block_b)
                 return (v, c, key, lacc + loss), None
 
             (vert_shard, ctx_shard, key, loss), _ = jax.lax.scan(
@@ -143,11 +145,13 @@ class ParameterServerTrainer:
                     self.vert[lo:lo + rows_sub] = np.asarray(v_dev)
                     loss_sum += float(loss)
                     self.counters.host_syncs += 2
-                    self.counters.bytes_through_host += 2 * v_dev.size * 4
+                    self.counters.bytes_through_host += (
+                        2 * v_dev.size * v_dev.dtype.itemsize)
         for i in range(n):
             self.ctx[i * rows:(i + 1) * rows] = np.asarray(ctx_dev[i])
             self.counters.host_syncs += 1
-            self.counters.bytes_through_host += ctx_dev[i].size * 4
+            self.counters.bytes_through_host += (
+                ctx_dev[i].size * ctx_dev[i].dtype.itemsize)
         return loss_sum / samples
 
     def embeddings(self) -> np.ndarray:

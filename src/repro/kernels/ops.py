@@ -15,10 +15,15 @@
 Pallas kernels run in interpret mode on CPU, compiled on TPU.
 
 `sgns_step` is the fused edge-minibatch update the hybrid trainer calls in
-its inner loop.
+its inner loop. Its kernel launch geometry — tile size ``block_b``, the
+duplicate-combine strategy, and how many minibatch rows fit one launch —
+is picked at trace time by :func:`plan_fused_update` from
+(B, d, S, dtype, VMEM budget); callers no longer guess a static knob
+(pass ``block_b=`` only to override the autotuner).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -26,12 +31,117 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels import sgns as _k
+from repro.launch import roofline
 
 _ON_TPU = jax.default_backend() == "tpu"
 
 
 def _interpret() -> bool:
     return not _ON_TPU
+
+
+# --------------------------------------------------------------------------
+# VMEM-aware launch-geometry autotuner. All decisions are made from static
+# shape/dtype info at trace time, so they cost nothing at run time and the
+# jit cache keys stay the same per shape.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """Trace-time launch geometry for the fused SGNS update.
+
+    block_b:    pipeline tile rows per grid step.
+    combine:    duplicate-combine strategy ("eq" | "segsum").
+    chunk_rows: max minibatch rows per kernel launch; sgns_step splits
+                larger batches into sequential launches (each chunk's SGD
+                apply lands before the next chunk's gathers — plain
+                sequential minibatch SGD at a coarser grain).
+    """
+
+    block_b: int
+    combine: str
+    chunk_rows: int
+
+
+def fused_update_vmem_bytes(B: int, d: int, S: int, dtype,
+                            combine: str) -> int:
+    """Modeled VMEM scratch for one sgns_fused_update launch of B rows.
+
+    Mirrors the scratch_shapes in kernels/sgns.py: gathered tables
+    (v/c/n, table dtype), f32 grads (dv/dc/dn), plus the combine's own
+    footprint — eq: the (B,B)/(B,S)/(S,S) equality matrices; segsum: the
+    sorted finals (table dtype) and f32 segment-prefix buffers.
+    """
+    item = jnp.dtype(dtype).itemsize
+    L = B + S
+    total = (2 * B + S) * d * item          # v_s, c_s, n_s
+    total += (2 * B + S) * d * 4            # dv_s, dc_s, dn_s
+    if combine == "eq":
+        total += (B * B + B * S + S * S) * 4
+    else:
+        total += (B + L) * d * item + L * d * 4   # fv_s, fc_s, ps_s
+    return total
+
+
+def choose_block_b(B: int, d: int, S: int, dtype,
+                   vmem_budget: int = roofline.VMEM_BYTES) -> int:
+    """Pipeline tile rows from (B, d, S, dtype, VMEM budget).
+
+    The tile only drives the per-step working set (two f32 (bb, d) row
+    tiles, the (bb, S) logits/grads, the f32 grad tiles) and the pipeline
+    depth, so the rule is: big enough to feed the MXU (cap 256), small
+    enough that a tile's compute working set stays well under the budget.
+    Batches past the cap get >= 2 grid steps automatically, which is where
+    the double-buffered gather actually has a compute phase to hide behind;
+    small batches run a single tile (forcing 2 tiles at B <= 256 measurably
+    hurts on the interpret-mode container and saves nothing on TPU — the
+    whole gather is tiny).
+    """
+    # per-tile active rows: the gathered v/c tile slices (table dtype) plus
+    # the f32 compute temporaries (v/c casts, dv/dc, the (bb, S) logits)
+    per_row = 2 * d * jnp.dtype(dtype).itemsize + 4 * (4 * d + 2 * S)
+    cap = max(8, vmem_budget // 8 // per_row)
+    bb = min(256, B, cap)
+    if bb >= 8:
+        bb -= bb % 8                    # f32 sublane alignment
+    return max(1, bb)
+
+
+def plan_fused_update(B: int, d: int, S: int, dtype, *,
+                      block_b: int | None = None,
+                      combine: str | None = None,
+                      vmem_budget: int = roofline.VMEM_BYTES) -> FusedPlan:
+    """Pick (block_b, combine, chunk_rows) for a B-row fused update.
+
+    combine: equality-matrix reference while its O(B²) matrices fit the
+    budget, segment-sum beyond. chunk_rows: the largest block_b multiple
+    whose modeled scratch fits the budget (>= one tile even if nothing
+    "fits" — interpret mode has no real VMEM and TPU will simply spill).
+
+    Deliberate tradeoff when chunking kicks in: combine is decided from
+    the WHOLE padded batch, so a batch too big for eq runs segsum chunks
+    sized by segsum's (smaller) footprint — the fewest launches. The
+    alternative — eq-sized chunks, each running the MXU-friendly combine —
+    means ~3x more launches, each re-DMAing the shared negatives and doing
+    B'² multiplies where segsum does B'·d adds; which side wins is a real-
+    TPU measurement (ROADMAP "VMEM model calibration"). Pass combine="eq"
+    with a pinned block_b to force eq-sized chunks for that experiment.
+    """
+    bb = block_b if block_b is not None else choose_block_b(
+        B, d, S, dtype, vmem_budget)
+    bb = min(bb, B)
+    Bp = -(-B // bb) * bb               # rows after sgns_step's tile padding
+    if combine is None:
+        combine = ("eq" if fused_update_vmem_bytes(Bp, d, S, dtype, "eq")
+                   <= vmem_budget else "segsum")
+    if fused_update_vmem_bytes(Bp, d, S, dtype, combine) <= vmem_budget:
+        chunk = Bp                      # whole batch in one launch
+    else:
+        chunk = bb
+        while (chunk + bb < Bp
+               and fused_update_vmem_bytes(chunk + bb, d, S, dtype, combine)
+               <= vmem_budget):
+            chunk += bb
+    return FusedPlan(block_b=bb, combine=combine, chunk_rows=chunk)
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
@@ -44,13 +154,19 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
     return jnp.pad(x, widths, constant_values=fill)
 
 
-def sgns_grads(v, c, n, mask, *, impl: str = "ref", block_b: int = 256):
-    """loss + (dv, dc, dn) for a shared-negative SGNS minibatch."""
+def sgns_grads(v, c, n, mask, *, impl: str = "ref",
+               block_b: int | None = None):
+    """loss + (dv, dc, dn) for a shared-negative SGNS minibatch.
+
+    block_b=None autotunes the tile size (choose_block_b)."""
     _check_impl(impl, ("ref", "pallas"))
     if impl == "ref":
         return _ref.sgns_grads_ref(v, c, n, mask)
-    B = v.shape[0]
-    bb = min(block_b, B) if B % min(block_b, B) == 0 else B
+    B, d = v.shape
+    S = n.shape[0]
+    if block_b is None:
+        block_b = choose_block_b(B, d, S, v.dtype)
+    bb = min(block_b, B)
     vp, cp, mp = (_pad_to(v, bb), _pad_to(c, bb), _pad_to(mask, bb))
     loss, dv, dc, dn = _k.sgns_grads(vp, cp, n, mp, block_b=bb,
                                      interpret=_interpret())
@@ -86,11 +202,17 @@ def scatter_add_rows(table, idx, upd, *, impl: str = "ref",
 @functools.partial(jax.jit,
                    static_argnames=("impl", "reduction", "block_b"))
 def sgns_step(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *, impl: str = "ref",
-              reduction: str = "sum", block_b: int = 256):
+              reduction: str = "sum", block_b: int | None = None):
     """One SGNS SGD minibatch against local (vert, ctx) shards.
 
     vert: (Nv, d), ctx: (Nc, d); idx_v/idx_c: (B,), idx_n: (S,), mask: (B,).
     Returns (vert', ctx', summed loss).
+
+    ``block_b=None`` (the default) autotunes the whole launch geometry via
+    :func:`plan_fused_update`; pass an int to pin the tile size. Batches
+    larger than the plan's VMEM-sized ``chunk_rows`` run as sequential
+    fused launches (each chunk's SGD apply lands before the next chunk
+    gathers — coarser-grained sequential SGD, loss is the sum over chunks).
 
     ``reduction="sum"`` is word2vec-faithful: every pair's gradient is applied
     at full lr, and a shared-negative row accumulates up to B aligned
@@ -108,23 +230,42 @@ def sgns_step(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *, impl: str = "ref",
         # both fused branches tile B by bb and pad with (index 0, mask 0)
         # rows, which produce zero grads
         B = idx_v.shape[0]
-        bb = min(block_b, B)
-        iv_p, ic_p, m_p = (_pad_to(idx_v, bb), _pad_to(idx_c, bb),
-                           _pad_to(mask, bb))
+        d = vert.shape[1]
+        S = idx_n.shape[0]
+        plan = plan_fused_update(B, d, S, vert.dtype, block_b=block_b)
+        bb = plan.block_b
         if impl == "pallas_fused2":
             # fully-fused pipelined update: the kernel applies -lr*grad
             # straight to the aliased tables — no standalone scatter passes,
             # no (idx_c ++ idx_n) concatenate round-trip through HBM. The
             # kernel's duplicate-combine write-back makes padded positions
             # write row 0's correct final value.
-            return _k.sgns_fused_update(
-                vert, ctx, iv_p, ic_p, idx_n, m_p, lr_eff, block_b=bb,
-                interpret=_interpret())
+            if B <= plan.chunk_rows:
+                iv_p, ic_p, m_p = (_pad_to(idx_v, bb), _pad_to(idx_c, bb),
+                                   _pad_to(mask, bb))
+                return _k.sgns_fused_update(
+                    vert, ctx, iv_p, ic_p, idx_n, m_p, lr_eff, block_b=bb,
+                    combine=plan.combine, interpret=_interpret())
+            # chunked launches: B rows don't fit one launch's VMEM —
+            # sequential fused updates over chunk_rows-row slices
+            loss = jnp.float32(0.0)
+            for s in range(0, B, plan.chunk_rows):
+                e = min(s + plan.chunk_rows, B)
+                iv_c, ic_c, m_c = (_pad_to(idx_v[s:e], bb),
+                                   _pad_to(idx_c[s:e], bb),
+                                   _pad_to(mask[s:e], bb))
+                vert, ctx, lc = _k.sgns_fused_update(
+                    vert, ctx, iv_c, ic_c, idx_n, m_c, lr_eff,
+                    block_b=bb, combine=plan.combine,
+                    interpret=_interpret())
+                loss = loss + lc
+            return vert, ctx, loss
         # pallas_fused: one kernel for DMA-gather + grads (rows never
         # round-trip HBM), then standalone scatters. Scatter the REAL rows
         # only: padded zero-grad rows would be wasted DMAs, and their
-        # repeated index 0 would trip scatter_add_rows' duplicate check
-        # into the serialized slow path.
+        # repeated index 0 would serialize the blocks they land in.
+        iv_p, ic_p, m_p = (_pad_to(idx_v, bb), _pad_to(idx_c, bb),
+                           _pad_to(mask, bb))
         loss, dv, dc, dn = _k.sgns_fused_grads(
             vert, ctx, iv_p, ic_p, idx_n, m_p, block_b=bb,
             interpret=_interpret())

@@ -19,9 +19,11 @@ Kernels:
   * :func:`sgns_fused_update` — the paper's full fused hot loop: pipelined
     double-buffered gather → grads → **in-kernel SGD apply** straight back to
     the HBM-resident tables (aliased outputs). One HBM round-trip per row.
+    Duplicate scatter targets combine via an O(B²) equality-matrix matmul
+    (small B, the reference) or an O(B·d) sort-based segment sum (large B).
   * :func:`gather_rows`       — multi-row blocks, overlapped async row copies.
-  * :func:`scatter_add_rows`  — multi-row blocks; overlapped RMW when the
-    index vector is duplicate-free, serialized otherwise.
+  * :func:`scatter_add_rows`  — multi-row blocks; per-block duplicate flags —
+    only a block with an internal collision serializes its RMW.
   * ``*_rowwise``             — the original one-row-per-grid-step layouts,
     kept as the interpret-mode reference implementations.
 
@@ -235,27 +237,37 @@ def sgns_fused_grads(vert, ctx, idx_v, idx_c, idx_n, mask, *,
 # Scatter-accumulate semantics without read-modify-write: all B rows were
 # gathered *pre-update*, so the final value of table row r is
 #   orig[r] - lr * Σ_{positions p with idx[p]==r} grad[p].
-# The per-position sums are a (B, B) equality-matrix matmul (MXU-friendly);
-# every position then writes the SAME final value for its row, so the
+# Every position then writes the SAME final value for its row, so the
 # write-back is pure pipelined DMA with no RAW hazards — duplicate writes
 # race benignly (identical bytes). ctx duplicates may span idx_c and idx_n;
-# the cross blocks of the equality matrix handle that, which is also what
-# lets ops.sgns_step drop its (idx_c ++ idx_n) concatenate round-trip.
-# Padded rows (mask 0, index 0) fold in for free: their grads are zero, and
-# the combine makes them write row 0's correct final value.
+# the combine runs over the concatenated (idx_c ++ idx_n) index space, which
+# is also what lets ops.sgns_step drop its concatenate round-trip through
+# HBM. Padded rows (mask 0, index 0) fold in for free: their grads are zero,
+# and the combine makes them write row 0's correct final value.
+#
+# Two duplicate-combine strategies (`combine=`):
+#   * "eq"     — (B, B) equality-matrix matmuls (MXU-friendly). O(B²) VMEM:
+#                the reference path, caps B per launch at ~2k rows (f32).
+#   * "segsum" — sort-based segment-sum: the host argsorts the index vectors
+#                once (XLA), the kernel runs a forward segment-prefix pass
+#                and a backward run-total broadcast over the sorted runs —
+#                O(B·d) memory and work, so B ≫ 2k fits in one launch. The
+#                sorted order also means the write-back touches each table
+#                row's duplicates consecutively.
 # --------------------------------------------------------------------------
 _NWRITE = 4   # write-back semaphore ring depth (max outstanding row writes)
 
+# largest B for which a direct sgns_fused_update call auto-selects the
+# equality-matrix combine ((B, B) f32 = 4 MB here); ops.plan_fused_update
+# makes the production decision from the full VMEM model instead
+_EQ_COMBINE_MAX_B = 1024
 
-def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
-                        vert_hbm, ctx_hbm, ivv_ref, icv_ref, inv_ref,
-                        mask_ref, lr_ref,
-                        vert_out, ctx_out, loss_ref,
-                        v_s, c_s, n_s, dv_s, dc_s, dn_s,
-                        gsem, nsem, wsem):
-    i = pl.program_id(0)
+
+def _fused_main_body(i, iv_ref, ic_ref, in_ref, vert_hbm, ctx_hbm, mask_ref,
+                     loss_ref, v_s, c_s, n_s, dv_s, dc_s, dn_s, gsem, nsem):
+    """Shared per-grid-step body of both fused-update kernels: the double-
+    buffered row-gather pipeline + MXU tile grads + loss/dn accumulation."""
     T = pl.num_programs(0)
-    B, d = v_s.shape
     bb = mask_ref.shape[0]
     S = n_s.shape[0]
     f32 = jnp.float32
@@ -307,6 +319,39 @@ def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
     dn_s[...] += dn_tile
     loss_ref[...] += loss_tile
 
+
+def _write_rows(src, idx_sref, tbl_out, count, wsem):
+    """Pipelined row write-back: semaphore ring, _NWRITE in flight."""
+    def body(p, _):
+        @pl.when(p >= _NWRITE)
+        def _retire():
+            q = p - _NWRITE
+            pltpu.make_async_copy(
+                src.at[q], tbl_out.at[idx_sref[q]],
+                wsem.at[q % _NWRITE]).wait()
+        pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
+                              wsem.at[p % _NWRITE]).start()
+        return 0
+    jax.lax.fori_loop(0, count, body, 0)
+    for p in range(max(0, count - _NWRITE), count):   # drain
+        pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
+                              wsem.at[p % _NWRITE]).wait()
+
+
+def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
+                        vert_hbm, ctx_hbm, ivv_ref, icv_ref, inv_ref,
+                        mask_ref, lr_ref,
+                        vert_out, ctx_out, loss_ref,
+                        v_s, c_s, n_s, dv_s, dc_s, dn_s,
+                        gsem, nsem, wsem):
+    i = pl.program_id(0)
+    T = pl.num_programs(0)
+    B, d = v_s.shape
+    S = n_s.shape[0]
+    f32 = jnp.float32
+    _fused_main_body(i, iv_ref, ic_ref, in_ref, vert_hbm, ctx_hbm, mask_ref,
+                     loss_ref, v_s, c_s, n_s, dv_s, dc_s, dn_s, gsem, nsem)
+
     @pl.when(i == T - 1)
     def _apply():
         lr = lr_ref[0, 0]
@@ -331,57 +376,201 @@ def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
         c_s[...] = c_s[...] + (-lr * dcsum).astype(c_s.dtype)
         n_s[...] = n_s[...] + (-lr * dnsum).astype(n_s.dtype)
 
-        def write_rows(src, idx_sref, tbl_out, count):
-            """Pipelined row write-back: semaphore ring, _NWRITE in flight."""
-            def body(p, _):
-                @pl.when(p >= _NWRITE)
-                def _retire():
-                    q = p - _NWRITE
-                    pltpu.make_async_copy(
-                        src.at[q], tbl_out.at[idx_sref[q]],
-                        wsem.at[q % _NWRITE]).wait()
-                pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
-                                      wsem.at[p % _NWRITE]).start()
-                return 0
-            jax.lax.fori_loop(0, count, body, 0)
-            for p in range(max(0, count - _NWRITE), count):   # drain
-                pltpu.make_async_copy(src.at[p], tbl_out.at[idx_sref[p]],
-                                      wsem.at[p % _NWRITE]).wait()
-
-        write_rows(v_s, iv_ref, vert_out, B)
-        write_rows(c_s, ic_ref, ctx_out, B)
-        write_rows(n_s, in_ref, ctx_out, S)
+        _write_rows(v_s, iv_ref, vert_out, B, wsem)
+        _write_rows(c_s, ic_ref, ctx_out, B, wsem)
+        _write_rows(n_s, in_ref, ctx_out, S, wsem)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _sgns_update_kernel_segsum(iv_ref, ic_ref, in_ref,        # scalar prefetch
+                               pv_ref, ivs_ref, vflag_ref,
+                               pc_ref, icns_ref, cflag_ref,
+                               vert_hbm, ctx_hbm, mask_ref, lr_ref,
+                               vert_out, ctx_out, loss_ref,
+                               v_s, c_s, n_s, dv_s, dc_s, dn_s,
+                               fv_s, fc_s, ps_s,
+                               gsem, nsem, wsem):
+    """Fused update with the sort-based segment-sum duplicate-combine.
+
+    The host argsorted the index vectors: pv/pc map sorted position → batch
+    position (ctx positions p ≥ B address idx_n's grads dn_s[p - B]); ivs/
+    icns are the sorted indices (the write-back targets); vflag/cflag pack
+    run boundaries (bit 0 = first of its run, bit 1 = last). The combine is
+    two O(B) passes per side instead of an O(B²) equality matmul:
+
+      forward:  acc resets at each run start; ps[j] = prefix sum of the
+                run's grads up to sorted position j.
+      backward: the run total (ps at the run's last position) propagates
+                back over the run; every position emits its row's final
+                value orig - lr·total into fv/fc.
+
+    All positions of a run emit identical bytes, so the pipelined write-back
+    keeps the eq path's benign-race property.
+    """
+    i = pl.program_id(0)
+    T = pl.num_programs(0)
+    B, d = v_s.shape
+    S = n_s.shape[0]
+    L = B + S
+    f32 = jnp.float32
+    _fused_main_body(i, iv_ref, ic_ref, in_ref, vert_hbm, ctx_hbm, mask_ref,
+                     loss_ref, v_s, c_s, n_s, dv_s, dc_s, dn_s, gsem, nsem)
+
+    @pl.when(i == T - 1)
+    def _apply():
+        lr = lr_ref[0, 0]
+
+        def combine(count, perm_ref, flag_ref, grad_row, orig_row, out_buf):
+            zero = jnp.zeros((1, d), f32)
+
+            def fwd(j, acc):
+                g = grad_row(perm_ref[j])
+                acc = jnp.where((flag_ref[j] & 1) == 1, g, acc + g)
+                ps_s[pl.ds(j, 1), :] = acc
+                return acc
+            jax.lax.fori_loop(0, count, fwd, zero)
+
+            def bwd(t, tot):
+                j = count - 1 - t
+                tot = jnp.where((flag_ref[j] & 2) == 2,
+                                ps_s[pl.ds(j, 1), :], tot)
+                # same op structure as the eq path's in-place SGD: the
+                # combined update is cast to the table dtype, the add runs
+                # in the table dtype
+                out_buf[pl.ds(j, 1), :] = (
+                    orig_row(perm_ref[j]) + (-lr * tot).astype(out_buf.dtype))
+                return tot
+            jax.lax.fori_loop(0, count, bwd, zero)
+
+        combine(B, pv_ref, vflag_ref,
+                lambda p: dv_s[pl.ds(p, 1), :],
+                lambda p: v_s[pl.ds(p, 1), :], fv_s)
+
+        # ctx side runs over the concatenated (idx_c ++ idx_n) position
+        # space: p < B is a positive-context grad, p >= B a shared-negative
+        # grad — this is exactly the cross-coupling the eq path's eq_cn
+        # blocks provided
+        def c_grad(p):
+            pc = jnp.minimum(p, B - 1)
+            pn = jnp.maximum(p - B, 0)
+            return jnp.where(p < B, dc_s[pl.ds(pc, 1), :],
+                             dn_s[pl.ds(pn, 1), :])
+
+        def c_orig(p):
+            pc = jnp.minimum(p, B - 1)
+            pn = jnp.maximum(p - B, 0)
+            return jnp.where(p < B, c_s[pl.ds(pc, 1), :],
+                             n_s[pl.ds(pn, 1), :])
+
+        combine(L, pc_ref, cflag_ref, c_grad, c_orig, fc_s)
+
+        _write_rows(fv_s, ivs_ref, vert_out, B, wsem)
+        _write_rows(fc_s, icns_ref, ctx_out, L, wsem)
+
+
+def _run_flags(sorted_idx):
+    """Bit 0: first position of its equal-index run; bit 1: last."""
+    brk = sorted_idx[1:] != sorted_idx[:-1]
+    one = jnp.ones((1,), bool)
+    start = jnp.concatenate([one, brk])
+    end = jnp.concatenate([brk, one])
+    return start.astype(jnp.int32) | (end.astype(jnp.int32) << 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "combine", "interpret"))
 def sgns_fused_update(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *,
-                      block_b: int = 256, interpret: bool = False):
+                      block_b: int = 256, combine: str | None = None,
+                      interpret: bool = False):
     """One fully-fused SGNS SGD minibatch: gather + grads + apply in a single
     pallas_call with the tables aliased input→output.
 
     vert: (Nv, d); ctx: (Nc, d) (same dtype); idx_v/idx_c: (B,); idx_n: (S,);
     mask: (B,); lr: scalar. B must be a multiple of min(block_b, B) —
     ops.sgns_step pads. Returns (vert', ctx', loss).
+
+    ``combine`` selects the duplicate-combine strategy: ``"eq"`` (equality-
+    matrix matmuls, O(B²) VMEM — the small-B reference), ``"segsum"``
+    (sort-based segment sum, O(B·d) — scales to B ≫ 2k), or ``None`` to pick
+    by B. ops.plan_fused_update makes the production choice from the full
+    VMEM model.
     """
     B = idx_v.shape[0]
     d = vert.shape[1]
     S = idx_n.shape[0]
     assert vert.dtype == ctx.dtype, (vert.dtype, ctx.dtype)
+    if combine is None:
+        combine = "eq" if B <= _EQ_COMBINE_MAX_B else "segsum"
+    assert combine in ("eq", "segsum"), combine
     bb = min(block_b, B)
     assert B % bb == 0, (B, bb)
     f32 = jnp.float32
     iv32 = idx_v.astype(jnp.int32)
     ic32 = idx_c.astype(jnp.int32)
     in32 = idx_n.astype(jnp.int32)
+    out_shape = (
+        jax.ShapeDtypeStruct(vert.shape, vert.dtype),
+        jax.ShapeDtypeStruct(ctx.shape, ctx.dtype),
+        jax.ShapeDtypeStruct((1, 1), f32),
+    )
+    table_scratch = [
+        pltpu.VMEM((B, d), vert.dtype),                  # v_s
+        pltpu.VMEM((B, d), ctx.dtype),                   # c_s
+        pltpu.VMEM((S, d), ctx.dtype),                   # n_s
+        pltpu.VMEM((B, d), f32),                         # dv_s
+        pltpu.VMEM((B, d), f32),                         # dc_s
+        pltpu.VMEM((S, d), f32),                         # dn_s
+    ]
+    sems = [
+        pltpu.SemaphoreType.DMA((2,)),                   # gather (rotating)
+        pltpu.SemaphoreType.DMA,                         # negatives
+        pltpu.SemaphoreType.DMA((_NWRITE,)),             # write-back ring
+    ]
+    if combine == "eq":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B // bb,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),        # vert (HBM)
+                pl.BlockSpec(memory_space=pltpu.ANY),        # ctx (HBM)
+                pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),  # idx_v as vector
+                pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),  # idx_c as vector
+                pl.BlockSpec((S, 1), lambda i, *_: (0, 0)),  # idx_n as vector
+                pl.BlockSpec((bb, 1), lambda i, *_: (i, 0)),  # mask tile
+                pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),  # lr
+            ],
+            out_specs=(
+                pl.BlockSpec(memory_space=pltpu.ANY),        # vert' (aliased)
+                pl.BlockSpec(memory_space=pltpu.ANY),        # ctx'  (aliased)
+                pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),  # loss (accum)
+            ),
+            scratch_shapes=table_scratch + sems,
+        )
+        vert2, ctx2, loss = pl.pallas_call(
+            _sgns_update_kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            # operands 0..2 are the scalar-prefetch index vectors.
+            input_output_aliases={3: 0, 4: 1},
+            interpret=interpret,
+        )(iv32, ic32, in32, vert, ctx,
+          iv32.reshape(B, 1), ic32.reshape(B, 1), in32.reshape(S, 1),
+          mask.reshape(B, 1), jnp.asarray(lr, f32).reshape(1, 1))
+        return vert2, ctx2, loss[0, 0]
+
+    # segsum: sort each scatter index space once on the XLA side; the kernel
+    # combines duplicates over the sorted runs in O(B·d)
+    L = B + S
+    perm_v = jnp.argsort(iv32).astype(jnp.int32)          # stable
+    ivs = jnp.take(iv32, perm_v)
+    icn = jnp.concatenate([ic32, in32])
+    perm_c = jnp.argsort(icn).astype(jnp.int32)
+    icns = jnp.take(icn, perm_c)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=9,
         grid=(B // bb,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),            # vert (HBM)
             pl.BlockSpec(memory_space=pltpu.ANY),            # ctx (HBM)
-            pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),      # idx_v as vector
-            pl.BlockSpec((B, 1), lambda i, *_: (0, 0)),      # idx_c as vector
-            pl.BlockSpec((S, 1), lambda i, *_: (0, 0)),      # idx_n as vector
             pl.BlockSpec((bb, 1), lambda i, *_: (i, 0)),     # mask tile
             pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),      # lr
         ],
@@ -390,32 +579,22 @@ def sgns_fused_update(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *,
             pl.BlockSpec(memory_space=pltpu.ANY),            # ctx'  (aliased)
             pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),      # loss (accum)
         ),
-        scratch_shapes=[
-            pltpu.VMEM((B, d), vert.dtype),                  # v_s
-            pltpu.VMEM((B, d), ctx.dtype),                   # c_s
-            pltpu.VMEM((S, d), ctx.dtype),                   # n_s
-            pltpu.VMEM((B, d), f32),                         # dv_s
-            pltpu.VMEM((B, d), f32),                         # dc_s
-            pltpu.VMEM((S, d), f32),                         # dn_s
-            pltpu.SemaphoreType.DMA((2,)),                   # gather (rotating)
-            pltpu.SemaphoreType.DMA,                         # negatives
-            pltpu.SemaphoreType.DMA((_NWRITE,)),             # write-back ring
-        ],
+        scratch_shapes=table_scratch + [
+            pltpu.VMEM((B, d), vert.dtype),                  # fv_s (finals)
+            pltpu.VMEM((L, d), ctx.dtype),                   # fc_s (finals)
+            pltpu.VMEM((L, d), f32),                         # ps_s (prefixes)
+        ] + sems,
     )
     vert2, ctx2, loss = pl.pallas_call(
-        _sgns_update_kernel,
+        _sgns_update_kernel_segsum,
         grid_spec=grid_spec,
-        out_shape=(
-            jax.ShapeDtypeStruct(vert.shape, vert.dtype),
-            jax.ShapeDtypeStruct(ctx.shape, ctx.dtype),
-            jax.ShapeDtypeStruct((1, 1), f32),
-        ),
-        # operands 0..2 are the scalar-prefetch index vectors.
-        input_output_aliases={3: 0, 4: 1},
+        out_shape=out_shape,
+        # operands 0..8 are the scalar-prefetch index/permutation vectors.
+        input_output_aliases={9: 0, 10: 1},
         interpret=interpret,
-    )(iv32, ic32, in32, vert, ctx,
-      iv32.reshape(B, 1), ic32.reshape(B, 1), in32.reshape(S, 1),
-      mask.reshape(B, 1), jnp.asarray(lr, f32).reshape(1, 1))
+    )(iv32, ic32, in32,
+      perm_v, ivs, _run_flags(ivs), perm_c, icns, _run_flags(icns),
+      vert, ctx, mask.reshape(B, 1), jnp.asarray(lr, f32).reshape(1, 1))
     return vert2, ctx2, loss[0, 0]
 
 
@@ -499,10 +678,14 @@ def gather_rows_rowwise(table, idx, *, interpret: bool = False):
 
 
 # --------------------------------------------------------------------------
-# row scatter-add: multi-row blocks. When the (padded) index vector has no
-# duplicates the block's reads all overlap, the adds vectorize, and the
-# writes all overlap; with duplicates we fall back to serialized per-row
-# read-modify-write (the only order that accumulates correctly).
+# row scatter-add: multi-row blocks with PER-BLOCK duplicate flags. A block
+# whose own indices are duplicate-free runs the overlapped path (reads all
+# overlap, the adds vectorize, the writes all overlap); only blocks with an
+# internal collision fall back to serialized per-row read-modify-write (the
+# only order that accumulates correctly). Duplicates *across* blocks are
+# safe on the overlapped path: the grid is sequential and every block's
+# writes are waited before its step ends, so a later block's read of the
+# same row sees the earlier block's write.
 # --------------------------------------------------------------------------
 def _scatter_add_block_kernel(idx_ref, dup_ref, table_ref, upd_ref, out_ref,
                               row_s, sem, *, valid: int):
@@ -512,7 +695,7 @@ def _scatter_add_block_kernel(idx_ref, dup_ref, table_ref, upd_ref, out_ref,
     # padded tail rows (global index >= valid) do no DMA at all, so padding
     # neither races real row updates nor forces the serialized path
 
-    @pl.when(dup_ref[0] == 0)
+    @pl.when(dup_ref[i] == 0)
     def _overlapped():
         def rstart(j, _):
             @pl.when(i * rb + j < valid)
@@ -546,7 +729,7 @@ def _scatter_add_block_kernel(idx_ref, dup_ref, table_ref, upd_ref, out_ref,
             return 0
         jax.lax.fori_loop(0, rb, wwait, 0)
 
-    @pl.when(dup_ref[0] != 0)
+    @pl.when(dup_ref[i] != 0)
     def _serialized():
         def body(j, _):
             @pl.when(i * rb + j < valid)
@@ -569,8 +752,10 @@ def _scatter_add_block_kernel(idx_ref, dup_ref, table_ref, upd_ref, out_ref,
 def scatter_add_rows(table, idx, upd, *, rows_per_block: int = 8,
                      interpret: bool = False):
     """table[idx[i]] += upd[i] (duplicates accumulate), `rows_per_block` rows
-    per grid step. A host-side duplicate check (sorted-adjacent compare)
-    selects the overlapped fast path or the serialized RMW path."""
+    per grid step. A host-side per-block duplicate check (sorted-adjacent
+    compare within each block) selects the overlapped fast path or the
+    serialized RMW path block by block, so one colliding block no longer
+    serializes the whole scatter."""
     B = idx.shape[0]
     N, d = table.shape
     rb = min(rows_per_block, B)
@@ -578,9 +763,13 @@ def scatter_add_rows(table, idx, upd, *, rows_per_block: int = 8,
     idx32 = idx.astype(jnp.int32)
     idx_p = jnp.pad(idx32, (0, Bp - B))   # pad rows are skipped in-kernel
     upd_p = _pad_rows(upd, Bp)
-    # duplicate check over the REAL indices only (sorted-adjacent compare)
-    srt = jnp.sort(idx32)
-    dup = jnp.any(srt[1:] == srt[:-1]).astype(jnp.int32).reshape(1)
+    # per-block duplicate flags over the REAL indices (padded tail positions
+    # get unique negative sentinels so they can't fake a collision with a
+    # real index; the kernel skips them regardless)
+    sentinels = -1 - jnp.arange(Bp - B, dtype=jnp.int32)
+    srt = jnp.sort(jnp.concatenate([idx32, sentinels]).reshape(Bp // rb, rb),
+                   axis=1)
+    dup = jnp.any(srt[:, 1:] == srt[:, :-1], axis=1).astype(jnp.int32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Bp // rb,),

@@ -21,6 +21,10 @@ import re
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s
 LINK_BW = 50e9               # bytes/s per ICI link
+VMEM_BYTES = 16 * 2**20      # on-chip vector memory per core (~16 MB); the
+                             # budget kernels.ops sizes fused-kernel scratch
+                             # against (compiled reality to be tightened on
+                             # real TPU — see ROADMAP)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -50,10 +50,13 @@ def train_embedding(args):
 
     n_dev = jax.device_count()
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    cfg_kw = {}
+    if args.dtype is not None:          # None -> HybridConfig default (bf16)
+        cfg_kw["dtype"] = args.dtype
     cfg = HybridConfig(dim=args.dim, minibatch=SMALL.minibatch,
                        negatives=SMALL.negatives, subparts=args.subparts,
                        neg_pool=SMALL.neg_pool, lr=args.lr, seed=args.seed,
-                       impl=args.impl)
+                       impl=args.impl, block_b=args.block_b, **cfg_kw)
     trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
                                      degrees=g.degrees())
     trainer.init_embeddings()
@@ -181,6 +184,14 @@ def main():
                     choices=["ref", "pallas", "pallas_fused",
                              "pallas_fused2"],
                     help="kernels.ops execution path for the episode step")
+    ap.add_argument("--dtype", default=None,
+                    choices=["float32", "bfloat16"],
+                    help="embedding-table dtype (default: the HybridConfig "
+                         "default, bfloat16; pass float32 for the "
+                         "paper-faithful tables)")
+    ap.add_argument("--block-b", type=int, default=None,
+                    help="pin the fused-kernel tile size (default: "
+                         "VMEM-aware autotune in kernels.ops)")
     ap.add_argument("--ckpt-every", type=int, default=5)
     # lm mode
     ap.add_argument("--reduced", action="store_true")

@@ -1,0 +1,67 @@
+"""AUC-parity gate for the bf16 table default (ROADMAP "bf16 table default").
+
+bf16 tables halve ring-rotation bytes and HBM footprint; grads are computed
+in f32 inside the kernels either way. The default flip in
+``HybridConfig.dtype`` is gated on this small-graph link-prediction run:
+bf16 must land within 0.5% AUC of f32 on the identical schedule/seeds.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (HybridConfig, HybridEmbeddingTrainer,
+                        build_episode_blocks)
+from repro.core import eval as ev
+from repro.graph.csr import build_csr
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+
+def test_default_dtype_is_bf16():
+    """The flip this module gates: bf16 is the table default, f32 stays one
+    CLI flag away (launch.train --dtype float32)."""
+    assert HybridConfig().dtype == "bfloat16"
+    assert np.dtype("bfloat16").itemsize == 2
+
+
+@pytest.fixture(scope="module")
+def lp_graph(sbm_graph):
+    train_e, test_e = ev.split_edges(sbm_graph, 0.05, seed=1)
+    g = build_csr(train_e, sbm_graph.num_nodes, symmetrize=False,
+                  dedup=False)
+    neg_e = ev.sample_negative_pairs(sbm_graph, len(test_e), seed=3)
+    return g, test_e, neg_e
+
+
+def _train_auc(dtype: str, g, test_e, neg_e, epochs: int = 12) -> float:
+    # NOTE on the schedule: the gate must compare CONVERGED runs. Under an
+    # under-converged schedule (lr=0.025, 8 epochs: f32 AUC ~0.68) bf16
+    # trails by several points because tiny early updates round away in the
+    # bf16 tables; at this schedule (f32 AUC ~0.88) the two dtypes agree to
+    # ~0.1%.
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = HybridConfig(dim=48, minibatch=32, negatives=8, subparts=2,
+                       neg_pool=2048, lr=0.05, dtype=dtype)
+    tr = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+    tr.init_embeddings()
+    store = MemorySampleStore()
+    for epoch in range(epochs):
+        WalkEngine(g, WalkConfig(walk_length=10, window=5, episodes=1,
+                                 seed=epoch), store).run_epoch(epoch)
+        eb = build_episode_blocks(np.asarray(store.get(epoch, 0)), tr.part,
+                                  pad_multiple=cfg.minibatch)
+        tr.train_episode(eb, lr=cfg.lr * max(1 - epoch / epochs, 0.05))
+        store.drop_epoch(epoch)
+    V = tr.embeddings().astype(np.float32)
+    Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
+    return ev.auc_score(
+        np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
+        np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
+
+
+def test_bf16_auc_parity_with_f32(lp_graph):
+    """bf16 within 0.5% AUC of f32 on the identical small-graph run."""
+    g, test_e, neg_e = lp_graph
+    auc_f32 = _train_auc("float32", g, test_e, neg_e)
+    auc_bf16 = _train_auc("bfloat16", g, test_e, neg_e)
+    assert auc_f32 > 0.8, auc_f32          # the run itself must be learning
+    assert auc_bf16 >= auc_f32 - 0.005, (auc_bf16, auc_f32)

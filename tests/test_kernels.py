@@ -194,6 +194,186 @@ def test_sgns_step_fused2_duplicate_scatter_accumulate():
                                atol=1e-6)
 
 
+# --------------------------------------------------------------------------
+# segment-sum duplicate-combine: parity vs the equality-matrix reference
+# path (and the sgns_step oracle) across dtypes, odd B, heavy duplicates,
+# and batch sizes past the old (B, B) wall.
+# --------------------------------------------------------------------------
+def _fused_both_combines(vert, ctx, iv, ic, inn, mask, lr, block_b):
+    out = {}
+    for combine in ("eq", "segsum"):
+        out[combine] = sgns.sgns_fused_update(
+            vert, ctx, iv, ic, inn, mask, lr, block_b=block_b,
+            combine=combine, interpret=True)
+    return out["eq"], out["segsum"]
+
+
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    # both combines sum duplicate grads in f32 and apply one table-dtype
+    # add; only the f32 summation ORDER differs, so f32 parity is tight and
+    # bf16 can differ by at most the final-cast ulp
+    (jnp.float32, 2e-6, 1e-7),
+    (jnp.bfloat16, 1e-2, 1e-3),
+])
+@pytest.mark.parametrize("B,block_b", [(48, 16), (64, 64), (96, 32)])
+def test_fused_update_segsum_matches_eq(dtype, rtol, atol, B, block_b):
+    """segsum vs eq on heavy duplicates (incl. an idx_c/idx_n collision)."""
+    Nv, Nc, d, S = 70, 90, 64, 8
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, dtype,
+                                                kbase=100, dup=True)
+    lr = jnp.float32(0.07)
+    (v1, c1, l1), (v2, c2, l2) = _fused_both_combines(
+        vert, ctx, iv, ic, inn, mask, lr, block_b)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1, np.float32),
+                               np.asarray(v2, np.float32), rtol=rtol,
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), rtol=rtol,
+                               atol=atol)
+
+
+def test_fused_update_segsum_all_same_index():
+    """Worst case for the combine: every position scatters to ONE vertex row
+    and one ctx row (which the negatives also hit) — a single B-long run."""
+    Nv, Nc, d, B, S = 40, 50, 32, 128, 8
+    vert, ctx, *_ = _step_inputs(Nv, Nc, B, S, d, kbase=110)
+    iv = jnp.full((B,), 7, jnp.int32)
+    ic = jnp.full((B,), 9, jnp.int32)
+    inn = jnp.full((S,), 9, jnp.int32)
+    mask = jnp.ones(B)
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ref.sgns_step_ref(vert, ctx, iv, ic, inn, mask, lr)
+    v2, c2, l2 = sgns.sgns_fused_update(vert, ctx, iv, ic, inn, mask, lr,
+                                        block_b=32, combine="segsum",
+                                        interpret=True)
+    np.testing.assert_allclose(float(l0), float(l2), rtol=1e-4)
+    # a 128-term f32 sum reassociated: modest tolerance vs the oracle
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v2), rtol=1e-3,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c2), rtol=1e-3,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("B", [37, 97])
+def test_sgns_step_fused2_segsum_odd_batch_padding(B, monkeypatch):
+    """Odd B through ops.sgns_step with the combine forced to segsum: the
+    padded (index 0, mask 0) tail must fold into row 0's run harmlessly."""
+    from repro.kernels import ops
+    monkeypatch.setattr(
+        ops, "plan_fused_update",
+        lambda *a, **kw: ops.FusedPlan(block_b=16, combine="segsum",
+                                       chunk_rows=1 << 30))
+    Nv, Nc, d, S = 40, 50, 32, 4
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=120)
+    iv = iv.at[0].set(0)   # make row 0 a real update target too
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ref.sgns_step_ref(vert, ctx, iv, ic, inn, mask, lr)
+    v1, c1, l1 = ops.sgns_step.__wrapped__(
+        vert, ctx, iv, ic, inn, mask, lr, impl="pallas_fused2")
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=2e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=2e-4,
+                               atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(2, 72), S=st.integers(1, 12),
+       stride=st.integers(1, 4))
+def test_fused_update_segsum_matches_eq_property(B, S, stride):
+    """Property sweep: random geometry + a duplication stride; single-tile
+    launch (block_b=B) so any B is legal."""
+    Nv, Nc, d = 30, 35, 32
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=130)
+    iv = iv.at[::stride].set(3)
+    ic = ic.at[::stride].set(5)
+    inn = inn.at[0].set(5)
+    lr = jnp.float32(0.05)
+    (v1, c1, l1), (v2, c2, l2) = _fused_both_combines(
+        vert, ctx, iv, ic, inn, mask, lr, B)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=2e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=2e-6,
+                               atol=1e-7)
+
+
+@pytest.mark.slow
+def test_fused_update_segsum_B8192_no_quadratic_intermediate():
+    """The acceptance gate: exact parity at B = 8192 (4x past the old ~2k
+    equality-matrix cap) AND no (B, B) tensor anywhere in the lowered HLO."""
+    import functools
+    Nv = Nc = 4096
+    d, B, S = 64, 8192, 16
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=140)
+    mask = jnp.ones(B)
+    lr = jnp.float32(0.05)
+    fn = functools.partial(sgns.sgns_fused_update, block_b=256,
+                           combine="segsum", interpret=True)
+    hlo = jax.jit(fn).lower(vert, ctx, iv, ic, inn, mask, lr).as_text()
+    assert f"{B},{B}" not in hlo, "O(B^2) combine intermediate leaked back in"
+    v0, c0, l0 = ref.sgns_step_ref(vert, ctx, iv, ic, inn, mask, lr)
+    v1, c1, l1 = fn(vert, ctx, iv, ic, inn, mask, lr)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=3e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=3e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.slow
+def test_sgns_step_fused2_chunked_launches_B5120():
+    """B past the plan's VMEM chunk limit: ops.sgns_step must split into
+    sequential fused launches that match a ref oracle applied with the SAME
+    chunk boundaries (chunking = coarser-grained sequential SGD)."""
+    from repro.kernels import ops
+    Nv = Nc = 1024
+    d, B, S = 128, 5120, 16
+    plan = ops.plan_fused_update(B, d, S, jnp.float32)
+    assert plan.chunk_rows < B, plan    # the point of the test
+    vert, ctx, iv, ic, inn, mask = _step_inputs(Nv, Nc, B, S, d, kbase=150)
+    lr = jnp.float32(0.05)
+    v1, c1, l1 = ops.sgns_step(vert, ctx, iv, ic, inn, mask, lr,
+                               impl="pallas_fused2")
+    v0, c0, loss0 = vert, ctx, 0.0
+    for s in range(0, B, plan.chunk_rows):
+        e = min(s + plan.chunk_rows, B)
+        v0, c0, lc = ref.sgns_step_ref(v0, c0, iv[s:e], ic[s:e], inn,
+                                       mask[s:e], lr)
+        loss0 += float(lc)
+    np.testing.assert_allclose(loss0, float(l1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=3e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=3e-4,
+                               atol=1e-5)
+
+
+def test_scatter_add_rows_per_block_dup_flags():
+    """Duplicates ACROSS blocks (none within) stay correct — the sequential
+    grid serializes blocks, so only intra-block collisions need the slow
+    path. Also: padding sentinels must not fake a collision with real 0s."""
+    N, d, rb = 40, 64, 8
+    tbl = _rand((N, d), k=94)
+    # 4 blocks, each a clean 0..7 permutation -> every row duplicated 4x
+    idx = jnp.concatenate([jnp.arange(8, dtype=jnp.int32)] * 4)
+    upd = _rand((32, d), k=95)
+    out = sgns.scatter_add_rows(tbl, idx, upd, rows_per_block=rb,
+                                interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.scatter_add_rows_ref(tbl, idx, upd)),
+        rtol=1e-5, atol=1e-6)
+    # odd B: last block is padded; real index 0 in it must not be treated
+    # as colliding with the pad positions
+    idx3 = jnp.zeros(29, jnp.int32).at[:14].set(jnp.arange(1, 15))
+    out3 = sgns.scatter_add_rows(tbl, idx3, upd[:29], rows_per_block=rb,
+                                 interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out3),
+        np.asarray(ref.scatter_add_rows_ref(tbl, idx3, upd[:29])),
+        rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("N,d,B,rb", [(50, 64, 20, 8), (30, 32, 9, 4),
                                       (64, 128, 64, 16)])
 def test_gather_rows_blocked_matches_rowwise(N, d, B, rb):
