@@ -19,7 +19,6 @@ thing.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -37,6 +36,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                                                   # noqa: E402
 
+from common import append_run                                # noqa: E402
 from repro.core import (HybridConfig, HybridEmbeddingTrainer,   # noqa: E402
                         build_episode_blocks)
 
@@ -141,13 +141,9 @@ def main():
                  "absolute numbers on TPU"),
         "results": results,
     }
-    from bench_kernels import load_runs
-    runs = load_runs(args.out)
-    runs.append(run)
-    with open(args.out, "w") as f:
-        json.dump({"benchmark": "sgns_episode", "runs": runs}, f, indent=2)
+    n = append_run(args.out, "sgns_episode", run)
     print(f"wrote {os.path.abspath(args.out)} "
-          f"(run {len(runs)}, {len(results)} rows)")
+          f"(run {n}, {len(results)} rows)")
 
 
 if __name__ == "__main__":

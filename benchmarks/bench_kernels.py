@@ -16,7 +16,6 @@ measures the real thing.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -28,6 +27,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax                                                   # noqa: E402
 import jax.numpy as jnp                                      # noqa: E402
 
+from common import append_run, load_runs                     # noqa: E402,F401
 from repro.kernels import ops                                # noqa: E402
 from repro.launch import roofline                            # noqa: E402
 
@@ -172,32 +172,9 @@ def main():
                  "absolute pallas timings only on TPU"),
         "results": results,
     }
-    runs = load_runs(args.out)
-    runs.append(run)
-    with open(args.out, "w") as f:
-        json.dump({"benchmark": "sgns_kernels", "runs": runs}, f, indent=2)
+    n = append_run(args.out, "sgns_kernels", run)
     print(f"wrote {os.path.abspath(args.out)} "
-          f"(run {len(runs)}, {len(results)} rows)")
-
-
-def load_runs(path: str) -> list:
-    """Existing runs from the trajectory file; migrates the PR-1 era
-    single-run layout (top-level 'results') into runs[0]."""
-    if not os.path.exists(path):
-        return []
-    try:
-        with open(path) as f:
-            old = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        return []
-    if isinstance(old, dict) and isinstance(old.get("runs"), list):
-        return old["runs"]
-    if isinstance(old, dict) and "results" in old:   # legacy single run
-        old.pop("benchmark", None)
-        old.setdefault("timestamp", None)
-        old.setdefault("smoke", False)
-        return [old]
-    return []
+          f"(run {n}, {len(results)} rows)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,180 @@
+"""Retrieval-serving benchmark: the per-PR serving trajectory.
+
+Sweeps ``ShardedEmbeddingStore.topk`` over (N, d, k, batch) for the serving
+impls and APPENDS a timestamped run to ``BENCH_serve.json`` (same runs[]
+layout as the kernel/episode trajectories; see benchmarks/README.md for the
+field reference). Two measurements per shape:
+
+* **direct** — store.topk latency on a fixed query batch (p50/p99 over
+  iterations) plus a table-scan byte model against the HBM roofline: a
+  batch must read every table byte once, so ``N_padded * d * itemsize /
+  HBM_BW`` is the latency floor and ``frac_of_roofline`` is floor/measured.
+* **batched** — a seeded open-loop burst through ``MicroBatcher``:
+  achieved QPS, request-latency percentiles, and the realized mean batch.
+
+Every row also records recall@k against the numpy oracle (exact kernels ⇒
+1.0; anything less is a correctness regression posting a fast number). On
+this CPU container the pallas impl runs in interpret mode (Python-slow, so
+its timings only track structure) — the ``xla`` impl is the meaningful CPU
+trajectory; on TPU the same harness measures the real kernel.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py          # full sweep
+    PYTHONPATH=src python benchmarks/bench_serve.py --smoke  # CI canary
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+
+from common import append_run                                # noqa: E402
+from repro.embed_serve import (MicroBatcher, ShardedEmbeddingStore,  # noqa: E402
+                               drive_open_loop, recall_at_k)
+from repro.embed_serve import topk as tk                     # noqa: E402
+from repro.launch import roofline                            # noqa: E402
+
+IMPLS = ("xla", "pallas")
+
+# (N, d, k, batch): table rows x dim, top-k, queries per request batch
+FULL_SHAPES = [
+    (4096, 64, 10, 16),
+    (4096, 128, 10, 64),
+    (16384, 128, 10, 64),
+    (16384, 128, 100, 64),
+]
+SMOKE_SHAPES = [(512, 32, 10, 8)]
+
+
+def scan_bytes_model(store: ShardedEmbeddingStore, batch: int,
+                     impl: str) -> int:
+    """HBM bytes one query batch must move; the (Q, k) outputs are noise
+    next to the scan. The pallas kernel holds one query block resident and
+    re-scans the table per block (topk.DEFAULT_BLOCK_Q rows); the xla path
+    materializes the full (Q, N) scores in one pass."""
+    table_bytes = sum(int(np.prod(sh.shape)) * sh.dtype.itemsize
+                      for sh in store.shards)
+    scans = (-(-batch // tk.DEFAULT_BLOCK_Q)) if impl == "pallas" else 1
+    return table_bytes * scans
+
+
+def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
+              iters: int, requests: int, dtype: str, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    table = rng.normal(0, 0.1, size=(N, d)).astype(np.float32)
+    store = ShardedEmbeddingStore.from_array(table, dtype=dtype)
+    queries = table[rng.integers(0, N, size=batch)]
+
+    # direct path: fixed-batch latency + scan-bytes roofline
+    vals, ids = store.topk(queries, k, impl=impl)      # compile + warm up
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        store.topk(queries, k, impl=impl)
+        times.append(time.perf_counter() - t0)
+    times = np.sort(times)
+    direct_s = float(np.percentile(times, 50))
+    moved = scan_bytes_model(store, batch, impl)
+    bound_s = moved / roofline.HBM_BW
+    oracle_vals, oracle_ids = store.oracle_topk(queries, k)
+    # tie tolerance from ground-truth rescoring, not the kernel's claims
+    recall = recall_at_k(ids, oracle_ids,
+                         got_vals=store.score_ids(queries, ids),
+                         oracle_vals=oracle_vals)
+
+    # batched path: seeded open-loop burst through the frontend.
+    # fixed_batch pins the backend shape to max_batch (compiled above by
+    # the direct-path warm-up), so no retrace lands in a request latency
+    stream = table[rng.integers(0, N, size=requests)]
+    batcher = MicroBatcher(lambda q: store.topk(q, k, impl=impl), d,
+                           max_batch=batch, window_ms=2.0, fixed_batch=True)
+    _, req_lat, wall = drive_open_loop(batcher, stream)
+    batcher.close()
+
+    return {
+        "impl": impl,
+        "N": N,
+        "d": d,
+        "k": k,
+        "batch": batch,
+        "dtype": dtype,
+        "shards": len(store.shards),
+        "direct_p50_s": direct_s,
+        "direct_p99_s": float(np.percentile(times, 99)),
+        "queries_per_s_direct": batch / direct_s,
+        "scan_bytes_model": moved,
+        "roofline_bound_s": bound_s,
+        "frac_of_roofline": bound_s / direct_s,
+        "recall_at_k": recall,
+        "batched_requests": requests,
+        "batched_qps": requests / wall,
+        "batched_p50_s": float(np.percentile(req_lat, 50)),
+        "batched_p99_s": float(np.percentile(req_lat, 99)),
+        "batched_mean_batch": batcher.stats.mean_batch,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape / few iters (CI regression canary)")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--impls", default=",".join(IMPLS))
+    # f32 default like the other CPU trajectories (bf16 is emulated and
+    # ~30x slower on CPU XLA); pass --dtype bfloat16 on TPU
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
+    interpret = jax.default_backend() != "tpu"
+    iters = args.iters or (2 if args.smoke else 5)
+    requests = args.requests or (32 if args.smoke else 256)
+
+    results = []
+    for (N, d, k, batch) in shapes:
+        for impl in args.impls.split(","):
+            # interpret-mode pallas is Python-slow: keep its sweep light
+            it = 1 if (impl == "pallas" and interpret) else iters
+            req = min(requests, 4 * batch) if (impl == "pallas"
+                                               and interpret) else requests
+            r = bench_one(impl, N, d, k, batch, iters=it, requests=req,
+                          dtype=args.dtype)
+            results.append(r)
+            print(f"N={N:6d} d={d:4d} k={k:4d} B={batch:4d} {impl:7s} "
+                  f"direct p50 {r['direct_p50_s']*1e3:9.2f}ms "
+                  f"({r['queries_per_s_direct']:9.1f} q/s, "
+                  f"{r['frac_of_roofline']*100:8.4f}% of roofline) | "
+                  f"batched {r['batched_qps']:9.1f} QPS | "
+                  f"recall@{k} {r['recall_at_k']:.4f}")
+            assert r["recall_at_k"] == 1.0, (
+                "serving recall regression", impl, N, d, k)
+
+    run = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "interpret_mode": interpret,
+        "dtype": args.dtype,
+        "hbm_bw_model_bytes_per_s": roofline.HBM_BW,
+        "note": ("interpret-mode pallas timings are Python-bound; compare "
+                 "xla timings and the scan-byte model across PRs, absolute "
+                 "pallas timings only on TPU"),
+        "results": results,
+    }
+    n = append_run(args.out, "embed_serve", run)
+    print(f"wrote {os.path.abspath(args.out)} "
+          f"(run {n}, {len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

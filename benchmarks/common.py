@@ -8,6 +8,8 @@ reported alongside, since they are what scales the gap on real hardware.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -17,6 +19,41 @@ from repro.core import (HybridConfig, HybridEmbeddingTrainer,
 from repro.core import eval as ev
 from repro.graph.csr import CSRGraph, build_csr
 from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+
+# ---------------------------------------------------------------------------
+# trajectory files: every BENCH_*.json holds {"benchmark": ..., "runs": [...]}
+# and every benchmark invocation APPENDS a timestamped run, so the numbers
+# form an actual across-PR trajectory. All three bench harnesses (kernels,
+# episode, serve) share this machinery.
+# ---------------------------------------------------------------------------
+def load_runs(path: str) -> list:
+    """Existing runs from a trajectory file; migrates the PR-1 era
+    single-run layout (top-level 'results') into runs[0]."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    if isinstance(old, dict) and isinstance(old.get("runs"), list):
+        return old["runs"]
+    if isinstance(old, dict) and "results" in old:   # legacy single run
+        old.pop("benchmark", None)
+        old.setdefault("timestamp", None)
+        old.setdefault("smoke", False)
+        return [old]
+    return []
+
+
+def append_run(path: str, benchmark: str, run: dict) -> int:
+    """Append one timestamped run to a trajectory file; returns run count."""
+    runs = load_runs(path)
+    runs.append(run)
+    with open(path, "w") as f:
+        json.dump({"benchmark": benchmark, "runs": runs}, f, indent=2)
+    return len(runs)
 
 
 def sbm_graph(n=3000, k=20, seed=0, rounds=40, batch=40000):

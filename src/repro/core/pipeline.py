@@ -36,13 +36,22 @@ class EpisodePipeline:
             block_cap=self.block_cap, pad_multiple=self.pad_multiple)
 
     def prefetch(self, epoch: int, episode: int) -> None:
-        self._next = self._pool.submit(self._build, epoch, episode)
+        self._next = ((epoch, episode),
+                      self._pool.submit(self._build, epoch, episode))
 
     def get(self, epoch: int, episode: int):
-        """Returns the prefetched blocks (or builds synchronously on miss)."""
+        """Returns the prefetched blocks (or builds synchronously on miss).
+
+        The prefetch is keyed by (epoch, episode): asking for anything else
+        than what was prefetched discards the stale future (cancelled if it
+        hasn't started; otherwise it finishes idle on the worker) and falls
+        back to a synchronous build, instead of silently handing back the
+        wrong episode's blocks."""
         if self._next is not None:
-            fut, self._next = self._next, None
-            return fut.result()
+            (key, fut), self._next = self._next, None
+            if key == (epoch, episode):
+                return fut.result()
+            fut.cancel()
         return self._build(epoch, episode)
 
     def close(self):

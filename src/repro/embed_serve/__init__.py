@@ -1,0 +1,20 @@
+"""Sharded embedding retrieval serving (the paper's downstream consumer).
+
+Training produces billion-row embedding tables so recommendation can ask
+"nearest neighbors of this user/item" — this package serves that query:
+``ShardedEmbeddingStore`` loads a training checkpoint into the same
+``NodePartition`` row layout training used (one shard per device),
+``topk`` scans shards with a Pallas blocked MIPS kernel and merges the
+per-shard lists, and ``MicroBatcher`` coalesces single-query traffic into
+kernel-sized batches. ``launch/embed_serve.py`` is the CLI."""
+from repro.embed_serve.batcher import (BatcherStats, MicroBatcher,
+                                       drive_open_loop)
+from repro.embed_serve.store import ShardedEmbeddingStore, recall_at_k
+from repro.embed_serve.topk import (merge_topk, select_topk, topk_mips,
+                                    topk_mips_rowwise, topk_mips_xla)
+
+__all__ = [
+    "BatcherStats", "MicroBatcher", "ShardedEmbeddingStore",
+    "drive_open_loop", "merge_topk", "recall_at_k", "select_topk",
+    "topk_mips", "topk_mips_rowwise", "topk_mips_xla",
+]

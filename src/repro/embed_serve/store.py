@@ -1,0 +1,210 @@
+"""Device-sharded embedding store: trained tables → servable shards.
+
+The serving twin of the training layout: tables are row-partitioned with
+the same ``NodePartition`` block rule the trainer uses (node n → shard
+n // rows, local row n % rows), one shard per device, so a checkpoint
+written by ``launch/train.py`` loads without any re-indexing — shard s of
+the store holds exactly the rows device s held during training (subparts=1:
+serving has no rotation, so the sub-part split is irrelevant here).
+
+Queries fan out to every shard (each runs the Pallas top-k kernel over its
+resident rows — the GraphVite-style shard-local lookup), and the per-shard
+(k) lists meet in ``topk.merge_topk``. Tables keep their checkpoint dtype
+(bf16 by default, honoring ``HybridConfig.dtype``) and are loaded bitwise;
+``normalize=True`` rescales rows to unit norm at load so the same MIPS
+kernel serves cosine retrieval.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import NodePartition
+from repro.embed_serve import topk as tk
+from repro.kernels import ref as kref
+from repro.train.checkpoint import load_arrays
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+QUERY_IMPLS = ("auto", "pallas", "rowwise", "xla")
+
+
+class ShardedEmbeddingStore:
+    """Row-sharded embedding table + exact top-k retrieval over it."""
+
+    def __init__(self, shards, part: NodePartition, valid, devices, *,
+                 host_table, block_n: int, step: int = -1):
+        self.shards = shards                  # per-device (rows_p, d) arrays
+        self.part = part
+        self.valid = tuple(valid)             # real rows per shard
+        self.devices = tuple(devices)
+        self.host_table = host_table          # (num_nodes, d) as served,
+        self.block_n = block_n                # or None (keep_host_table off)
+        self.step = step
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def from_array(cls, table, *, devices=None, dtype=None,
+                   block_n: int = 256, normalize: bool = False,
+                   keep_host_table: bool = True,
+                   step: int = -1) -> "ShardedEmbeddingStore":
+        """Shard an in-memory (num_nodes, d) table across `devices`.
+
+        dtype=None keeps the array's dtype (the checkpoint's, i.e. the
+        training ``HybridConfig.dtype``). Shard rows are padded to a
+        block_n multiple once, here, so serving never re-materializes the
+        table; padded rows are masked out of every query by ``valid``.
+        keep_host_table=False drops the host copy after sharding (serving
+        itself never reads it — it only backs ``oracle_topk`` and query
+        sampling; at production table sizes it would double the footprint).
+        """
+        devices = list(devices) if devices is not None else jax.devices()
+        table = np.asarray(table)
+        if dtype is not None and np.dtype(jnp.dtype(dtype)) != table.dtype:
+            table = np.asarray(jnp.asarray(table).astype(jnp.dtype(dtype)))
+        if normalize:                         # cosine via the MIPS kernel
+            f32 = table.astype(np.float32)
+            f32 /= np.linalg.norm(f32, axis=1, keepdims=True) + 1e-12
+            table = np.asarray(jnp.asarray(f32).astype(table.dtype))
+        num_nodes, d = table.shape
+        part = NodePartition(num_nodes, dims=(len(devices),), subparts=1)
+        rows = part.padded_rows_per_shard
+        bn = min(block_n, rows)
+        rows_p = -(-rows // bn) * bn
+        padded = part.pad_table(table)
+        shards, valid = [], []
+        for s, dev in enumerate(devices):
+            sh = padded[s * rows:(s + 1) * rows]
+            if rows_p > rows:
+                sh = np.concatenate(
+                    [sh, np.zeros((rows_p - rows, d), sh.dtype)])
+            shards.append(jax.device_put(sh, dev))
+            valid.append(int(np.clip(num_nodes - s * rows, 0, rows)))
+        return cls(shards, part, valid, devices,
+                   host_table=table if keep_host_table else None,
+                   block_n=bn, step=step)
+
+    @classmethod
+    def load(cls, path: str, *, table: str = "vertex",
+             **kwargs) -> "ShardedEmbeddingStore":
+        """Load one embedding table from a ``launch/train.py`` checkpoint
+        (``save_checkpoint({"vertex": ..., "context": ...})`` layout)."""
+        arrays, step = load_arrays(path)
+        if table not in arrays:
+            raise KeyError(f"checkpoint {path!r} has no table {table!r}; "
+                           f"keys: {sorted(arrays)}")
+        return cls.from_array(arrays[table], step=step, **kwargs)
+
+    # ------------------------------------------------------------ querying
+    @property
+    def num_nodes(self) -> int:
+        return self.part.num_nodes
+
+    @property
+    def dim(self) -> int:
+        return self.shards[0].shape[1]
+
+    def topk(self, queries, k: int, *, impl: str = "auto"):
+        """Exact MIPS top-k over all shards.
+
+        queries: (Q, d). Returns ((Q, k) f32 scores, (Q, k) i32 global node
+        ids), k clamped to num_nodes. impl: "pallas" (the blocked DMA
+        kernel; interpret mode off-TPU), "rowwise" (reference kernel),
+        "xla" (plain jnp — the CPU serving path), "auto" (pallas on TPU,
+        xla elsewhere).
+        """
+        if impl not in QUERY_IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; one of {QUERY_IMPLS}")
+        if impl == "auto":
+            impl = "pallas" if _ON_TPU else "xla"
+        k = min(k, self.num_nodes)
+        q = jnp.asarray(np.asarray(queries, dtype=np.float32))
+        rows = self.part.padded_rows_per_shard
+        # dispatch every shard before syncing any: jax dispatch is async, so
+        # P devices scan concurrently instead of one behind the other
+        launched = []
+        for s, shard in enumerate(self.shards):
+            if self.valid[s] == 0:      # num_nodes < s * rows: nothing here
+                continue
+            if impl == "pallas":
+                v, i = tk.topk_mips(shard, q, k=k, valid=self.valid[s],
+                                    block_n=self.block_n,
+                                    interpret=not _ON_TPU)
+            elif impl == "rowwise":
+                v, i = tk.topk_mips_rowwise(shard, q, k=k,
+                                            valid=self.valid[s],
+                                            interpret=not _ON_TPU)
+            else:
+                v, i = tk.topk_mips_xla(shard, q, k=k, valid=self.valid[s])
+            # shard-local → global node ids on the shard's own device
+            # (elementwise, overlaps the other shards' scans), preserving
+            # the sentinel of any sub-k shard so it keeps losing the merge
+            gi = jnp.where(i == tk.IDX_SENTINEL, tk.IDX_SENTINEL,
+                           i + s * rows)
+            launched.append((v, gi))
+        # one host sync for all shards, after everything is dispatched
+        staged = jax.device_get(launched)
+        per_v = [v for v, _ in staged]
+        per_i = [i for _, i in staged]
+        if len(per_v) == 1:
+            return per_v[0], per_i[0]
+        gv, gi = tk.merge_topk(jnp.asarray(np.stack(per_v)),
+                               jnp.asarray(np.stack(per_i)), k=k)
+        return np.asarray(gv), np.asarray(gi)
+
+    def oracle_topk(self, queries, k: int):
+        """Numpy ground truth over the full (unsharded) table."""
+        if self.host_table is None:
+            raise RuntimeError("store was built with keep_host_table=False; "
+                               "the oracle needs the host copy")
+        return kref.topk_mips_ref(self.host_table, queries,
+                                  min(k, self.num_nodes))
+
+    def score_ids(self, queries, ids) -> np.ndarray:
+        """Ground-truth numpy f32 scores of specific (Q, k) candidate ids.
+
+        This is what ``recall_at_k``'s tie tolerance should be fed — NOT a
+        kernel's own reported values, which would let a broken kernel
+        vouch for its own answers."""
+        if self.host_table is None:
+            raise RuntimeError("store was built with keep_host_table=False; "
+                               "rescoring needs the host copy")
+        q = np.asarray(queries, dtype=np.float32)
+        rows = self.host_table.astype(np.float32)[np.asarray(ids)]  # (Q,k,d)
+        return np.einsum("qd,qkd->qk", q, rows)
+
+
+def recall_at_k(got_ids, oracle_ids, *, got_vals=None, oracle_vals=None,
+                rtol: float = 1e-6) -> float:
+    """Mean |top-k ∩ oracle top-k| / k over queries.
+
+    With scores supplied, an id outside the oracle's list still counts if
+    its score reaches the oracle's k-th score within rtol: the kernels
+    (XLA/MXU accumulation) and the numpy oracle (BLAS) are not bitwise-
+    identical on continuous data, so an exact tie at the rank-k boundary
+    can ulp-flip between the two — and any row scoring at the boundary is
+    a legitimate top-k member. ``got_vals`` must be GROUND-TRUTH scores of
+    the returned ids (``ShardedEmbeddingStore.score_ids``), not the
+    kernel's own claims. Duplicate returned ids count once — a kernel that
+    repeats rank-1 k times scores 1/k here, not 1.0. Real retrieval bugs
+    surface as scores well below the boundary and still count as misses.
+    The single recall definition shared by the CLI gate and bench_serve,
+    so the two can't drift."""
+    got_ids = np.asarray(got_ids)
+    oracle_ids = np.asarray(oracle_ids)
+    hits = 0
+    for qi in range(oracle_ids.shape[0]):
+        o = set(oracle_ids[qi].tolist())
+        seen = set()
+        for j, g in enumerate(got_ids[qi].tolist()):
+            if g in seen:                # duplicates can't double-count
+                continue
+            seen.add(g)
+            if g in o:
+                hits += 1
+            elif got_vals is not None and oracle_vals is not None:
+                kth = float(oracle_vals[qi][-1])
+                if float(got_vals[qi][j]) >= kth - rtol * max(1.0, abs(kth)):
+                    hits += 1
+    return hits / oracle_ids.size

@@ -1,0 +1,258 @@
+"""Pallas blocked MIPS top-k kernels for sharded embedding retrieval.
+
+The serving hot loop is the training hot loop run backwards: instead of
+gathering a minibatch of rows by index, a query batch scans every table row
+once — a (Q, d) x (d, N) matmul that is O(1) arithmetic intensity per table
+byte, so (like training) the kernel's job is to touch each HBM row exactly
+once and keep the MXU fed while the next tile's DMA is in flight.
+
+Kernels (all validated against :func:`repro.kernels.ref.topk_mips_ref`):
+
+  * :func:`topk_mips`          — the production kernel: the table stays in
+    HBM; (bn, d) row tiles are double-buffered into VMEM by explicit DMA
+    (tile t+1's copy flies while tile t is scored on the MXU), and each
+    query block folds every tile into a running (bq, k) top-k held in the
+    revisited output block. One HBM read per table row per query block.
+  * :func:`topk_mips_rowwise`  — one table row per grid step through a
+    BlockSpec-pipelined (1, d) block; the interpret-mode reference, in the
+    spirit of ``kernels.sgns.gather_rows_rowwise``.
+  * :func:`topk_mips_xla`      — plain-jnp scores + the same selection
+    network; the CPU/XLA serving path and the shard-level oracle.
+  * :func:`merge_topk`         — the small jitted cross-shard reduce: P
+    per-shard (Q, k) results (global ids) → the global (Q, k).
+
+Exactness: scores are f32 (tables cast up before the dot, like the SGNS
+kernels), selection is exact MIPS with ties broken toward the smaller row
+index — the same total order as the numpy oracle's stable argsort.
+Sentinels: invalid positions (padded table rows, masked candidates) carry
+(-inf, int32 max), so they lose every comparison and a shard with fewer
+than k valid rows degrades gracefully in the cross-shard merge.
+
+Interpret mode on CPU; TPU is the compilation target (lane-alignment
+follow-ons for the (bq, k) outputs are in the ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+IDX_SENTINEL = jnp.iinfo(jnp.int32).max
+DEFAULT_BLOCK_Q = 128   # query rows per resident block (topk_mips default);
+                        # the table is re-scanned once per query block
+
+
+def select_topk(vals: jax.Array, idx: jax.Array, k: int):
+    """Exact top-k over (Q, M) candidate (value, index) pairs.
+
+    k unrolled VPU-shaped passes: each selects the row-wise max value, and
+    among equal values the smallest index, then masks the taken slot to the
+    (-inf, sentinel) pair. Shared by the kernels' per-tile merge (M = k +
+    tile rows) and the cross-shard reduce (M = shards * k) so the tie rule
+    cannot diverge between the two levels.
+
+    Returns ((Q, k) f32, (Q, k) i32).
+    """
+    vals = vals.astype(jnp.float32)
+    idx = idx.astype(jnp.int32)
+    out_v, out_i = [], []
+    for _ in range(k):
+        v = jnp.max(vals, axis=1)
+        is_max = vals == v[:, None]
+        i = jnp.min(jnp.where(is_max, idx, IDX_SENTINEL), axis=1)
+        taken = is_max & (idx == i[:, None])
+        vals = jnp.where(taken, NEG_INF, vals)
+        idx = jnp.where(taken, IDX_SENTINEL, idx)
+        out_v.append(v)
+        out_i.append(i)
+    return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _scored_tile(q_f32, tile, tile_start: jax.Array, valid: int):
+    """(bq, bn) f32 scores + global-index matrix for one table tile, with
+    padded rows (global index >= valid) already demoted to sentinels."""
+    f32 = jnp.float32
+    scores = jax.lax.dot_general(q_f32, tile.astype(f32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=f32)
+    gidx = tile_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    invalid = gidx >= valid
+    return (jnp.where(invalid, NEG_INF, scores),
+            jnp.where(invalid, IDX_SENTINEL, gidx))
+
+
+def _merge_into(out_v_ref, out_i_ref, scores, gidx, k: int):
+    """Fold a scored tile into the running top-k held in the output refs."""
+    cand_v = jnp.concatenate([out_v_ref[...], scores], axis=1)
+    cand_i = jnp.concatenate([out_i_ref[...], gidx], axis=1)
+    nv, ni = select_topk(cand_v, cand_i, k)
+    out_v_ref[...] = nv
+    out_i_ref[...] = ni
+
+
+# --------------------------------------------------------------------------
+# production kernel: HBM-resident table, double-buffered (bn, d) tile DMA
+# --------------------------------------------------------------------------
+def _topk_kernel(tbl_hbm, q_ref, out_v_ref, out_i_ref, tile_s, sem, *,
+                 k: int, bn: int, valid: int):
+    t = pl.program_id(1)
+    T = pl.num_programs(1)
+
+    def tile_copy(tt, op):
+        """start/wait tile tt's contiguous-row DMA on buffer slot tt % 2."""
+        getattr(pltpu.make_async_copy(
+            tbl_hbm.at[pl.ds(tt * bn, bn)],
+            tile_s.at[pl.ds((tt % 2) * bn, bn)],
+            sem.at[tt % 2]), op)()
+
+    @pl.when(t == 0)
+    def _prologue():           # new query block: restart the tile pipeline
+        tile_copy(0, "start")
+        out_v_ref[...] = jnp.full_like(out_v_ref, NEG_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, IDX_SENTINEL)
+
+    @pl.when(t + 1 < T)
+    def _prefetch_next():      # double buffering: next tile's DMA flies
+        tile_copy(t + 1, "start")   # while this tile is scored on the MXU
+
+    tile_copy(t, "wait")
+
+    tile = tile_s[pl.ds((t % 2) * bn, bn), :]
+    scores, gidx = _scored_tile(q_ref[...].astype(jnp.float32), tile,
+                                t * bn, valid)
+    _merge_into(out_v_ref, out_i_ref, scores, gidx, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "valid", "block_q",
+                                             "block_n", "interpret"))
+def topk_mips(table, queries, *, k: int, valid: int | None = None,
+              block_q: int = DEFAULT_BLOCK_Q, block_n: int = 256,
+              interpret: bool = False):
+    """Exact-MIPS top-k of `queries` against one table shard.
+
+    table: (N, d) HBM-resident shard (bf16 or f32 — scored in f32);
+    queries: (Q, d). `valid` masks padded tail rows (row >= valid scores
+    -inf and can never be returned); rows are padded here to a block_n
+    multiple if the caller didn't (the store pre-pads at load so serving
+    never re-materializes the table).
+
+    Returns ((Q, k) f32 scores, (Q, k) i32 shard-local row ids), both
+    sorted by the oracle's total order (descending score, ascending index
+    on ties). If valid < k the tail entries are (-inf, int32 max).
+    """
+    N, d = table.shape
+    Q = queries.shape[0]
+    valid = N if valid is None else valid
+    assert 0 < valid <= N, (valid, N)
+    bn = min(block_n, N)
+    if N % bn:
+        table = jnp.pad(table, ((0, (-N) % bn), (0, 0)))
+        N = table.shape[0]
+    bq = min(block_q, Q)
+    Qp = -(-Q // bq) * bq
+    qp = jnp.pad(queries, ((0, Qp - Q), (0, 0)))
+    grid = (Qp // bq, N // bn)        # table tiles innermost (sequential)
+    out_v, out_i = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, bn=bn, valid=valid),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),           # table (HBM)
+            pl.BlockSpec((bq, d), lambda qi, t: (qi, 0)),   # query block
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, k), lambda qi, t: (qi, 0)),   # running top-k
+            pl.BlockSpec((bq, k), lambda qi, t: (qi, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2 * bn, d), table.dtype),           # tile slots
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(table, qp)
+    return out_v[:Q], out_i[:Q]
+
+
+# --------------------------------------------------------------------------
+# rowwise reference: one table row per grid step, BlockSpec-pipelined
+# --------------------------------------------------------------------------
+def _topk_rowwise_kernel(row_ref, q_ref, out_v_ref, out_i_ref, *, k: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_v_ref[...] = jnp.full_like(out_v_ref, NEG_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, IDX_SENTINEL)
+
+    f32 = jnp.float32
+    score = jax.lax.dot_general(q_ref[...].astype(f32),
+                                row_ref[...].astype(f32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32)   # (Q, 1)
+    gidx = jnp.full_like(score, t, dtype=jnp.int32)
+    _merge_into(out_v_ref, out_i_ref, score, gidx, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "valid", "interpret"))
+def topk_mips_rowwise(table, queries, *, k: int, valid: int | None = None,
+                      interpret: bool = False):
+    """One-row-per-grid-step top-k, kept as the interpret-mode reference for
+    :func:`topk_mips` (grid covers only the valid rows, so padding needs no
+    masking here)."""
+    N, d = table.shape
+    Q = queries.shape[0]
+    valid = N if valid is None else valid
+    assert 0 < valid <= N, (valid, N)   # grid=(0,) would return garbage
+    return pl.pallas_call(
+        functools.partial(_topk_rowwise_kernel, k=k),
+        grid=(valid,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t: (t, 0)),         # table row
+            pl.BlockSpec((Q, d), lambda t: (0, 0)),         # queries resident
+        ],
+        out_specs=(
+            pl.BlockSpec((Q, k), lambda t: (0, 0)),
+            pl.BlockSpec((Q, k), lambda t: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(table, queries)
+
+
+# --------------------------------------------------------------------------
+# XLA paths: the CPU serving path and the cross-shard merge
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "valid"))
+def topk_mips_xla(table, queries, *, k: int, valid: int | None = None):
+    """Plain-jnp shard top-k: full (Q, N) scores + the shared selection
+    network. The serving path on CPU (Pallas interpret mode is Python-slow)
+    and the jnp-level oracle for the kernels."""
+    N = table.shape[0]
+    valid = N if valid is None else valid
+    f32 = jnp.float32
+    scores = queries.astype(f32) @ table.astype(f32).T
+    gidx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    invalid = gidx >= valid
+    return select_topk(jnp.where(invalid, NEG_INF, scores),
+                       jnp.where(invalid, IDX_SENTINEL, gidx), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(vals, idx, *, k: int):
+    """Cross-shard reduce: (P, Q, kk) per-shard results (ids already global)
+    → the global (Q, k). Each shard's list is exact for its rows, so the
+    global top-k is the top-k of the P*kk candidates — one selection pass,
+    same tie rule."""
+    P, Q, kk = vals.shape
+    return select_topk(jnp.swapaxes(vals, 0, 1).reshape(Q, P * kk),
+                       jnp.swapaxes(idx, 0, 1).reshape(Q, P * kk), k)

@@ -1,4 +1,8 @@
-"""Production serving launcher: batched-request decode loop for any arch.
+"""LM serving demo launcher: batched-request token-decode loop for the
+config-system LM archs (NOT the paper's embedding workload — embedding
+retrieval serving, i.e. loading a trained node-embedding checkpoint and
+answering top-k nearest-neighbor queries, lives in
+``repro.launch.embed_serve`` on top of the ``repro.embed_serve`` package).
 
 Chunked prefill builds the ring-buffer caches, then the decode loop serves
 one token per step for the whole batch (the decode_32k / long_500k

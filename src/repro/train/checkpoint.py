@@ -2,6 +2,12 @@
 
 Leaves are keyed by their tree path; restore rebuilds into the template's
 structure (and dtype) so checkpoints survive config-compatible code changes.
+
+Extension dtypes (bfloat16 — the embedding tables' default since the AUC
+parity gate) need special care: ``np.savez`` stores them as raw void bytes
+("|V2") and loses the type, so save records each such leaf's dtype name
+under a ``__dtype__:<key>`` entry and load view-casts the bytes back —
+bitwise, which is what the serving store's round-trip guarantee relies on.
 """
 from __future__ import annotations
 
@@ -9,6 +15,18 @@ import os
 
 import jax
 import numpy as np
+
+_DTYPE_PREFIX = "__dtype__:"
+
+
+def _named_dtype(name: str) -> np.dtype:
+    """Dtype from its saved name, including ml_dtypes extension types."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _flatten_with_names(tree):
@@ -25,15 +43,37 @@ def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
     arrs = _flatten_with_names(tree)
     if step is not None:
         arrs["__step__"] = np.asarray(step)
+    # extension dtypes (kind "V": bfloat16 & friends) lose their identity in
+    # the npz; record the name so load_arrays can view-cast the bytes back
+    for key, arr in list(arrs.items()):
+        if arr.dtype.kind == "V":
+            arrs[_DTYPE_PREFIX + key] = np.asarray(arr.dtype.name)
     tmp = path + ".tmp"
     np.savez(tmp, **arrs)
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
 
 
-def restore_checkpoint(path: str, template):
+def load_arrays(path: str):
+    """Raw ``key -> array`` view of a checkpoint, plus its step.
+
+    This is the loading path for consumers that know the key they want but
+    not the full tree template (e.g. ``embed_serve.store`` pulling one
+    embedding table out of a training checkpoint). Extension-dtype leaves
+    come back bitwise in their original dtype.
+    """
     with np.load(path) as f:
         data = {k: f[k] for k in f.files}
     step = int(data.pop("__step__", -1))
+    names = {k[len(_DTYPE_PREFIX):]: str(data.pop(k).item())
+             for k in list(data) if k.startswith(_DTYPE_PREFIX)}
+    for key, name in names.items():
+        if key in data and data[key].dtype.kind == "V":
+            data[key] = data[key].view(_named_dtype(name))
+    return data, step
+
+
+def restore_checkpoint(path: str, template):
+    data, step = load_arrays(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:

@@ -126,3 +126,38 @@ def test_episode_pipeline_prefetch(lp_setup):
         assert np.isfinite(loss)
     eng.join()
     pipe.close()
+
+
+class _EpisodeKeyedStore:
+    """Fake sample store whose pairs encode (epoch, episode), so a stale
+    prefetch is detectable in the built blocks."""
+
+    def get(self, epoch, episode):
+        rng = np.random.default_rng(1000 * epoch + episode)
+        return rng.integers(0, 64, size=(128, 2), dtype=np.int64)
+
+
+def test_episode_pipeline_prefetch_key_mismatch():
+    """get(e2, ep2) after prefetch(e1, ep1) must NOT hand back (e1, ep1)'s
+    blocks: the prefetch is keyed, and a miss falls back to a synchronous
+    build of the requested episode."""
+    from repro.core.partition import NodePartition
+
+    part = NodePartition(64, dims=(1,), subparts=1)
+    store = _EpisodeKeyedStore()
+    pipe = EpisodePipeline(store, part, pad_multiple=16)
+    try:
+        want = build_episode_blocks(store.get(0, 1), part, pad_multiple=16)
+
+        pipe.prefetch(0, 0)                      # stale: a different episode
+        got = pipe.get(0, 1)
+        np.testing.assert_array_equal(got.blocks, want.blocks)
+        np.testing.assert_array_equal(got.counts, want.counts)
+
+        pipe.prefetch(0, 1)                      # matching key: served as-is
+        got = pipe.get(0, 1)
+        np.testing.assert_array_equal(got.blocks, want.blocks)
+
+        assert pipe.get(0, 1) is not None        # no prefetch: sync build
+    finally:
+        pipe.close()
