@@ -1,14 +1,19 @@
 """Retrieval-serving benchmark: the per-PR serving trajectory.
 
 Sweeps ``ShardedEmbeddingStore.topk`` over (N, d, k, batch) for the serving
-impls and APPENDS a timestamped run to ``BENCH_serve.json`` (same runs[]
-layout as the kernel/episode trajectories; see benchmarks/README.md for the
-field reference). Two measurements per shape:
+impls — including the two-tier ``quant`` tier (int8 first pass + exact
+rescore) — and APPENDS a timestamped run to ``BENCH_serve.json`` (same
+runs[] layout as the kernel/episode trajectories; see benchmarks/README.md
+for the field reference). Two measurements per shape:
 
 * **direct** — store.topk latency on a fixed query batch (p50/p99 over
   iterations) plus a table-scan byte model against the HBM roofline: a
-  batch must read every table byte once, so ``N_padded * d * itemsize /
-  HBM_BW`` is the latency floor and ``frac_of_roofline`` is floor/measured.
+  batch must read every byte of whichever tier it scans once (the shards'
+  ACTUAL dtype itemsize — int8 for the quant tier, plus its f32 scales),
+  and the quant tier additionally gathers ``m`` full-precision rows per
+  query for the rescore (``rescore_bytes_model``, accounted separately).
+  floor = (scan + rescore bytes) / HBM_BW; ``frac_of_roofline`` is
+  floor/measured, same as ``bench_kernels.py``.
 * **batched** — a seeded open-loop burst through ``MicroBatcher``:
   achieved QPS, request-latency percentiles, and the realized mean batch.
 
@@ -36,11 +41,13 @@ import jax                                                   # noqa: E402
 
 from common import append_run                                # noqa: E402
 from repro.embed_serve import (MicroBatcher, ShardedEmbeddingStore,  # noqa: E402
-                               drive_open_loop, recall_at_k)
+                               drive_open_loop, overfetch_m, recall_at_k)
 from repro.embed_serve import topk as tk                     # noqa: E402
 from repro.launch import roofline                            # noqa: E402
 
-IMPLS = ("xla", "pallas")
+# "quant" routes through the two-tier scan (int8 kernel on TPU, int8 jnp
+# path on CPU — same auto rule as pallas/xla)
+IMPLS = ("xla", "pallas", "quant")
 
 # (N, d, k, batch): table rows x dim, top-k, queries per request batch
 FULL_SHAPES = [
@@ -52,23 +59,47 @@ FULL_SHAPES = [
 SMOKE_SHAPES = [(512, 32, 10, 8)]
 
 
-def scan_bytes_model(store: ShardedEmbeddingStore, batch: int,
-                     impl: str) -> int:
-    """HBM bytes one query batch must move; the (Q, k) outputs are noise
-    next to the scan. The pallas kernel holds one query block resident and
-    re-scans the table per block (topk.DEFAULT_BLOCK_Q rows); the xla path
-    materializes the full (Q, N) scores in one pass."""
-    table_bytes = sum(int(np.prod(sh.shape)) * sh.dtype.itemsize
-                      for sh in store.shards)
-    scans = (-(-batch // tk.DEFAULT_BLOCK_Q)) if impl == "pallas" else 1
-    return table_bytes * scans
+def scan_bytes_model(store: ShardedEmbeddingStore, batch: int, k: int,
+                     impl: str) -> tuple[int, int]:
+    """(scan bytes, rescore bytes) one query batch must move; the (Q, k)
+    outputs are noise next to the scan.
+
+    Scan: every byte of the scanned tier once per resident query block —
+    the shards' ACTUAL dtype itemsize (f32/bf16 exact shards, or the int8
+    shards + their f32 row scales for the quant tier; do not assume f32).
+    The pallas-kernel paths hold topk.DEFAULT_BLOCK_Q queries resident and
+    re-scan per block; the jnp paths materialize all scores in one pass.
+    Rescore (quant only): the tier-two gather reads m = ceil(k * overfetch)
+    full-precision rows per query from the exact shards."""
+    if impl.startswith("quant"):
+        tier_bytes = sum(
+            int(np.prod(q8.shape)) * q8.dtype.itemsize
+            + int(np.prod(sc.shape)) * sc.dtype.itemsize
+            for q8, sc in store.qshards)
+    else:
+        tier_bytes = sum(int(np.prod(sh.shape)) * sh.dtype.itemsize
+                         for sh in store.shards)
+    kernel_path = impl == "pallas" or (impl.startswith("quant")
+                                       and jax.default_backend() == "tpu")
+    scans = (-(-batch // tk.DEFAULT_BLOCK_Q)) if kernel_path else 1
+    rescore = 0
+    if impl.startswith("quant"):
+        itemsize = store.shards[0].dtype.itemsize
+        d = store.dim
+        for s, sh in enumerate(store.shards):
+            if store.valid[s] == 0:
+                continue
+            m = overfetch_m(k, store.overfetch, store.valid[s])
+            rescore += batch * m * d * itemsize
+    return tier_bytes * scans, rescore
 
 
 def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
               iters: int, requests: int, dtype: str, seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
     table = rng.normal(0, 0.1, size=(N, d)).astype(np.float32)
-    store = ShardedEmbeddingStore.from_array(table, dtype=dtype)
+    quant = "int8" if impl.startswith("quant") else None
+    store = ShardedEmbeddingStore.from_array(table, dtype=dtype, quant=quant)
     queries = table[rng.integers(0, N, size=batch)]
 
     # direct path: fixed-batch latency + scan-bytes roofline
@@ -80,8 +111,8 @@ def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
         times.append(time.perf_counter() - t0)
     times = np.sort(times)
     direct_s = float(np.percentile(times, 50))
-    moved = scan_bytes_model(store, batch, impl)
-    bound_s = moved / roofline.HBM_BW
+    scan_bytes, rescore_bytes = scan_bytes_model(store, batch, k, impl)
+    bound_s = (scan_bytes + rescore_bytes) / roofline.HBM_BW
     oracle_vals, oracle_ids = store.oracle_topk(queries, k)
     # tie tolerance from ground-truth rescoring, not the kernel's claims
     recall = recall_at_k(ids, oracle_ids,
@@ -104,11 +135,14 @@ def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
         "k": k,
         "batch": batch,
         "dtype": dtype,
+        "quant": store.quant,
+        "overfetch": store.overfetch if store.quant else None,
         "shards": len(store.shards),
         "direct_p50_s": direct_s,
         "direct_p99_s": float(np.percentile(times, 99)),
         "queries_per_s_direct": batch / direct_s,
-        "scan_bytes_model": moved,
+        "scan_bytes_model": scan_bytes,
+        "rescore_bytes_model": rescore_bytes,
         "roofline_bound_s": bound_s,
         "frac_of_roofline": bound_s / direct_s,
         "recall_at_k": recall,

@@ -5,16 +5,27 @@ Training produces billion-row embedding tables so recommendation can ask
 ``ShardedEmbeddingStore`` loads a training checkpoint into the same
 ``NodePartition`` row layout training used (one shard per device),
 ``topk`` scans shards with a Pallas blocked MIPS kernel and merges the
-per-shard lists, and ``MicroBatcher`` coalesces single-query traffic into
-kernel-sized batches. ``launch/embed_serve.py`` is the CLI."""
+per-shard lists (optionally through the two-tier ``quant`` scan: int8
+first pass at 4x less traffic, exact rescore of the survivors), and
+``MicroBatcher`` coalesces single-query traffic into kernel-sized
+batches. ``launch/embed_serve.py`` is the CLI."""
 from repro.embed_serve.batcher import (BatcherStats, MicroBatcher,
                                        drive_open_loop)
+from repro.embed_serve.quant import (DEFAULT_OVERFETCH, dequantize_rows,
+                                     overfetch_m, quantize_rows,
+                                     rescore_exact,
+                                     topk_mips_quant_rescored)
 from repro.embed_serve.store import ShardedEmbeddingStore, recall_at_k
-from repro.embed_serve.topk import (merge_topk, select_topk, topk_mips,
-                                    topk_mips_rowwise, topk_mips_xla)
+from repro.embed_serve.topk import (choose_block_n, merge_topk, select_topk,
+                                    topk_mips, topk_mips_quant,
+                                    topk_mips_quant_xla, topk_mips_rowwise,
+                                    topk_mips_xla, topk_scan_vmem_bytes)
 
 __all__ = [
-    "BatcherStats", "MicroBatcher", "ShardedEmbeddingStore",
-    "drive_open_loop", "merge_topk", "recall_at_k", "select_topk",
-    "topk_mips", "topk_mips_rowwise", "topk_mips_xla",
+    "BatcherStats", "DEFAULT_OVERFETCH", "MicroBatcher",
+    "ShardedEmbeddingStore", "choose_block_n", "dequantize_rows",
+    "drive_open_loop", "merge_topk", "overfetch_m", "quantize_rows",
+    "recall_at_k", "rescore_exact", "select_topk", "topk_mips",
+    "topk_mips_quant", "topk_mips_quant_rescored", "topk_mips_quant_xla",
+    "topk_mips_rowwise", "topk_mips_xla", "topk_scan_vmem_bytes",
 ]

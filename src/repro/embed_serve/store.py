@@ -13,6 +13,11 @@ resident rows — the GraphVite-style shard-local lookup), and the per-shard
 (bf16 by default, honoring ``HybridConfig.dtype``) and are loaded bitwise;
 ``normalize=True`` rescales rows to unit norm at load so the same MIPS
 kernel serves cosine retrieval.
+
+``quant="int8"`` additionally builds a symmetric per-row int8 copy of every
+shard (``embed_serve.quant``), enabling the two-tier scan
+(``impl="quant"``): int8 first pass at 4x less scan traffic, exact rescore
+of the over-fetched survivors, same cross-shard merge.
 """
 from __future__ import annotations
 
@@ -21,20 +26,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import NodePartition
+from repro.embed_serve import quant as qz
 from repro.embed_serve import topk as tk
 from repro.kernels import ref as kref
 from repro.train.checkpoint import load_arrays
 
 _ON_TPU = jax.default_backend() == "tpu"
 
-QUERY_IMPLS = ("auto", "pallas", "rowwise", "xla")
+QUERY_IMPLS = ("auto", "pallas", "rowwise", "xla",
+               "quant", "quant_pallas", "quant_xla")
+QUANT_TIERS = (None, "int8")
 
 
 class ShardedEmbeddingStore:
     """Row-sharded embedding table + exact top-k retrieval over it."""
 
     def __init__(self, shards, part: NodePartition, valid, devices, *,
-                 host_table, block_n: int, step: int = -1):
+                 host_table, block_n: int, step: int = -1,
+                 qshards=None, quant=None,
+                 overfetch: float = qz.DEFAULT_OVERFETCH):
         self.shards = shards                  # per-device (rows_p, d) arrays
         self.part = part
         self.valid = tuple(valid)             # real rows per shard
@@ -42,12 +52,16 @@ class ShardedEmbeddingStore:
         self.host_table = host_table          # (num_nodes, d) as served,
         self.block_n = block_n                # or None (keep_host_table off)
         self.step = step
+        self.qshards = qshards                # per-device (int8, scales) or
+        self.quant = quant                    # None (no quantized tier)
+        self.overfetch = overfetch            # default tier-one margin
 
     # ------------------------------------------------------------- loading
     @classmethod
     def from_array(cls, table, *, devices=None, dtype=None,
-                   block_n: int = 256, normalize: bool = False,
-                   keep_host_table: bool = True,
+                   block_n: int | None = None, normalize: bool = False,
+                   keep_host_table: bool = True, quant: str | None = None,
+                   overfetch: float = qz.DEFAULT_OVERFETCH,
                    step: int = -1) -> "ShardedEmbeddingStore":
         """Shard an in-memory (num_nodes, d) table across `devices`.
 
@@ -55,11 +69,21 @@ class ShardedEmbeddingStore:
         training ``HybridConfig.dtype``). Shard rows are padded to a
         block_n multiple once, here, so serving never re-materializes the
         table; padded rows are masked out of every query by ``valid``.
+        block_n=None sizes the scan tile with ``topk.choose_block_n``
+        against the VMEM budget (k not known yet — planned at the
+        ``DEFAULT_PLAN_K`` candidate allowance).
         keep_host_table=False drops the host copy after sharding (serving
         itself never reads it — it only backs ``oracle_topk`` and query
         sampling; at production table sizes it would double the footprint).
+        quant="int8" builds the two-tier scan's per-shard int8 copies
+        (``quant.quantize_rows`` of the served — post-normalize — rows,
+        same row order and padding as the exact shards); `overfetch` is
+        the default tier-one margin ``topk(impl="quant")`` uses.
         """
         devices = list(devices) if devices is not None else jax.devices()
+        if quant not in QUANT_TIERS:
+            raise ValueError(f"unknown quant tier {quant!r}; "
+                             f"one of {QUANT_TIERS}")
         table = np.asarray(table)
         if dtype is not None and np.dtype(jnp.dtype(dtype)) != table.dtype:
             table = np.asarray(jnp.asarray(table).astype(jnp.dtype(dtype)))
@@ -70,10 +94,12 @@ class ShardedEmbeddingStore:
         num_nodes, d = table.shape
         part = NodePartition(num_nodes, dims=(len(devices),), subparts=1)
         rows = part.padded_rows_per_shard
+        if block_n is None:
+            block_n = tk.choose_block_n(d, table.dtype)
         bn = min(block_n, rows)
         rows_p = -(-rows // bn) * bn
         padded = part.pad_table(table)
-        shards, valid = [], []
+        shards, qshards, valid = [], [], []
         for s, dev in enumerate(devices):
             sh = padded[s * rows:(s + 1) * rows]
             if rows_p > rows:
@@ -81,9 +107,15 @@ class ShardedEmbeddingStore:
                     [sh, np.zeros((rows_p - rows, d), sh.dtype)])
             shards.append(jax.device_put(sh, dev))
             valid.append(int(np.clip(num_nodes - s * rows, 0, rows)))
+            if quant == "int8":
+                q8, sc = qz.quantize_rows(sh)
+                qshards.append((jax.device_put(q8, dev),
+                                jax.device_put(sc, dev)))
         return cls(shards, part, valid, devices,
                    host_table=table if keep_host_table else None,
-                   block_n=bn, step=step)
+                   block_n=bn, step=step,
+                   qshards=qshards if quant else None, quant=quant,
+                   overfetch=overfetch)
 
     @classmethod
     def load(cls, path: str, *, table: str = "vertex",
@@ -105,19 +137,29 @@ class ShardedEmbeddingStore:
     def dim(self) -> int:
         return self.shards[0].shape[1]
 
-    def topk(self, queries, k: int, *, impl: str = "auto"):
+    def topk(self, queries, k: int, *, impl: str = "auto",
+             overfetch: float | None = None):
         """Exact MIPS top-k over all shards.
 
         queries: (Q, d). Returns ((Q, k) f32 scores, (Q, k) i32 global node
         ids), k clamped to num_nodes. impl: "pallas" (the blocked DMA
         kernel; interpret mode off-TPU), "rowwise" (reference kernel),
         "xla" (plain jnp — the CPU serving path), "auto" (pallas on TPU,
-        xla elsewhere).
+        xla elsewhere), "quant" (the two-tier int8 scan + exact rescore —
+        requires ``quant="int8"`` at load; kernel path on TPU, jnp path
+        elsewhere, or force with "quant_pallas"/"quant_xla"). `overfetch`
+        overrides the store's default tier-one margin for quant impls.
         """
         if impl not in QUERY_IMPLS:
             raise ValueError(f"unknown impl {impl!r}; one of {QUERY_IMPLS}")
         if impl == "auto":
             impl = "pallas" if _ON_TPU else "xla"
+        elif impl == "quant":
+            impl = "quant_pallas" if _ON_TPU else "quant_xla"
+        if impl.startswith("quant") and self.qshards is None:
+            raise RuntimeError("store has no quantized tier; build it with "
+                               "quant='int8'")
+        ov = self.overfetch if overfetch is None else overfetch
         k = min(k, self.num_nodes)
         q = jnp.asarray(np.asarray(queries, dtype=np.float32))
         rows = self.part.padded_rows_per_shard
@@ -135,6 +177,13 @@ class ShardedEmbeddingStore:
                 v, i = tk.topk_mips_rowwise(shard, q, k=k,
                                             valid=self.valid[s],
                                             interpret=not _ON_TPU)
+            elif impl.startswith("quant"):
+                q8, sc = self.qshards[s]
+                v, i = qz.topk_mips_quant_rescored(
+                    shard, q8, sc, q, k=k, overfetch=ov,
+                    valid=self.valid[s], block_n=self.block_n,
+                    impl="pallas" if impl == "quant_pallas" else "xla",
+                    interpret=not _ON_TPU)
             else:
                 v, i = tk.topk_mips_xla(shard, q, k=k, valid=self.valid[s])
             # shard-local → global node ids on the shard's own device

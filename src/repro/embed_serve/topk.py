@@ -13,6 +13,16 @@ Kernels (all validated against :func:`repro.kernels.ref.topk_mips_ref`):
     (tile t+1's copy flies while tile t is scored on the MXU), and each
     query block folds every tile into a running (bq, k) top-k held in the
     revisited output block. One HBM read per table row per query block.
+  * :func:`topk_mips_quant`    — the int8 first pass of the two-tier
+    quantized scan (``embed_serve.quant``): the same double-buffered
+    tile-DMA skeleton streaming (bn, d) *int8* tiles (4x less DMA traffic
+    than f32), per-row scales riding a pipelined (1, bn) block, keeping an
+    over-fetched running top-``m`` candidate set per query block. Its
+    output is approximate by the quantization error — survivors are
+    re-scored exactly by ``quant.rescore_exact``.
+  * :func:`topk_mips_quant_xla` — plain-jnp quantized first pass; the CPU
+    serving path for the quant tier and the kernel's cross-check (int8
+    scores are exact integers in f32, so the two agree bitwise).
   * :func:`topk_mips_rowwise`  — one table row per grid step through a
     BlockSpec-pipelined (1, d) block; the interpret-mode reference, in the
     spirit of ``kernels.sgns.gather_rows_rowwise``.
@@ -20,6 +30,11 @@ Kernels (all validated against :func:`repro.kernels.ref.topk_mips_ref`):
     network; the CPU/XLA serving path and the shard-level oracle.
   * :func:`merge_topk`         — the small jitted cross-shard reduce: P
     per-shard (Q, k) results (global ids) → the global (Q, k).
+
+Launch geometry: ``block_n=None`` (the default everywhere) sizes the scan
+tile with :func:`choose_block_n` — the serving mirror of
+``kernels.ops.choose_block_b``, fitting the (2*bn, d) double-buffer
+scratch plus the merge working set against ``roofline.VMEM_BYTES``.
 
 Exactness: scores are f32 (tables cast up before the dot, like the SGNS
 kernels), selection is exact MIPS with ties broken toward the smaller row
@@ -40,10 +55,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.launch import roofline
+
 NEG_INF = float("-inf")
 IDX_SENTINEL = jnp.iinfo(jnp.int32).max
 DEFAULT_BLOCK_Q = 128   # query rows per resident block (topk_mips default);
                         # the table is re-scanned once per query block
+DEFAULT_PLAN_K = 128    # running-candidate allowance choose_block_n assumes
+                        # when the query-time k is not yet known (store load)
+
+
+# --------------------------------------------------------------------------
+# VMEM-aware tile planner (the serving mirror of kernels.ops.choose_block_b:
+# all decisions from static shape/dtype info, nothing at run time)
+# --------------------------------------------------------------------------
+def topk_scan_vmem_bytes(bn: int, d: int, dtype, *, k: int = DEFAULT_PLAN_K,
+                         block_q: int = DEFAULT_BLOCK_Q) -> int:
+    """Modeled VMEM working set of one topk_mips/topk_mips_quant launch.
+
+    Mirrors the scratch_shapes + compute temporaries: the (2*bn, d)
+    double-buffer tile slots (table dtype), the f32 cast of the scored
+    tile, the resident (bq, d) query block, the (bq, bn) score/iota
+    matrices, the (bq, k + bn) candidate concat the k-pass selection walks
+    (vals/idx plus the per-pass masks — modeled at 4 f32-width copies),
+    and the revisited (bq, k) output blocks.
+    """
+    item = jnp.dtype(dtype).itemsize
+    total = 2 * bn * d * item            # double-buffered tile slots
+    total += bn * d * 4                  # f32 cast of the scored tile
+    total += block_q * d * 4             # resident query block
+    total += block_q * bn * 4 * 2        # (bq, bn) scores + index iota
+    total += block_q * (k + bn) * 4 * 4  # select_topk candidate working set
+    total += block_q * k * 4 * 2         # running (bq, k) output blocks
+    return total
+
+
+def choose_block_n(d: int, dtype, *, k: int = DEFAULT_PLAN_K,
+                   block_q: int = DEFAULT_BLOCK_Q,
+                   vmem_budget: int = roofline.VMEM_BYTES) -> int:
+    """Scan-tile rows from (d, dtype, k, block_q, VMEM budget).
+
+    Largest power-of-two tile (cap 512 — past that the merge cost per tile
+    grows without more DMA overlap to win) whose modeled working set fits
+    half the budget (headroom for compiler temporaries, same safety stance
+    as ``ops.choose_block_b``); floor 8 (f32 sublane). The (2*bn, d)
+    double-buffer scratch was previously unplanned — at d ≥ 4k an f32
+    bn=256 scratch alone busts a 16 MB budget.
+    """
+    bn = 512
+    while bn > 8 and topk_scan_vmem_bytes(
+            bn, d, dtype, k=k, block_q=block_q) > vmem_budget // 2:
+        bn //= 2
+    return bn
 
 
 def select_topk(vals: jax.Array, idx: jax.Array, k: int):
@@ -72,13 +135,17 @@ def select_topk(vals: jax.Array, idx: jax.Array, k: int):
     return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _scored_tile(q_f32, tile, tile_start: jax.Array, valid: int):
+def _scored_tile(q_f32, tile, tile_start: jax.Array, valid: int, scale=None):
     """(bq, bn) f32 scores + global-index matrix for one table tile, with
-    padded rows (global index >= valid) already demoted to sentinels."""
+    padded rows (global index >= valid) already demoted to sentinels.
+    `scale` ((1, bn) f32, int8 tiles only) rescales each row's raw integer
+    scores back to embedding units before the demotion."""
     f32 = jnp.float32
     scores = jax.lax.dot_general(q_f32, tile.astype(f32),
                                  (((1,), (1,)), ((), ())),
                                  preferred_element_type=f32)
+    if scale is not None:
+        scores = scores * scale
     gidx = tile_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
     invalid = gidx >= valid
     return (jnp.where(invalid, NEG_INF, scores),
@@ -95,10 +162,17 @@ def _merge_into(out_v_ref, out_i_ref, scores, gidx, k: int):
 
 
 # --------------------------------------------------------------------------
-# production kernel: HBM-resident table, double-buffered (bn, d) tile DMA
+# production kernel: HBM-resident table, double-buffered (bn, d) tile DMA.
+# One body serves both tiers — the exact f32/bf16 scan and the int8
+# first pass (quant=True adds the pipelined (1, bn) row-scale block), so
+# the prefetch/semaphore/padding logic cannot drift between them.
 # --------------------------------------------------------------------------
-def _topk_kernel(tbl_hbm, q_ref, out_v_ref, out_i_ref, tile_s, sem, *,
-                 k: int, bn: int, valid: int):
+def _topk_scan_kernel(*refs, k: int, bn: int, valid: int, quant: bool):
+    if quant:
+        tbl_hbm, scale_ref, q_ref, out_v_ref, out_i_ref, tile_s, sem = refs
+    else:
+        tbl_hbm, q_ref, out_v_ref, out_i_ref, tile_s, sem = refs
+        scale_ref = None
     t = pl.program_id(1)
     T = pl.num_programs(1)
 
@@ -122,47 +196,43 @@ def _topk_kernel(tbl_hbm, q_ref, out_v_ref, out_i_ref, tile_s, sem, *,
     tile_copy(t, "wait")
 
     tile = tile_s[pl.ds((t % 2) * bn, bn), :]
-    scores, gidx = _scored_tile(q_ref[...].astype(jnp.float32), tile,
-                                t * bn, valid)
+    scores, gidx = _scored_tile(
+        q_ref[...].astype(jnp.float32), tile, t * bn, valid,
+        scale=None if scale_ref is None else scale_ref[...])
     _merge_into(out_v_ref, out_i_ref, scores, gidx, k)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "valid", "block_q",
-                                             "block_n", "interpret"))
-def topk_mips(table, queries, *, k: int, valid: int | None = None,
-              block_q: int = DEFAULT_BLOCK_Q, block_n: int = 256,
-              interpret: bool = False):
-    """Exact-MIPS top-k of `queries` against one table shard.
+def _launch_topk_scan(table, scales, queries, *, k: int, valid: int,
+                      bq: int, bn: int, interpret: bool):
+    """Pad to tile multiples and launch :func:`_topk_scan_kernel`.
 
-    table: (N, d) HBM-resident shard (bf16 or f32 — scored in f32);
-    queries: (Q, d). `valid` masks padded tail rows (row >= valid scores
-    -inf and can never be returned); rows are padded here to a block_n
-    multiple if the caller didn't (the store pre-pads at load so serving
-    never re-materializes the table).
-
-    Returns ((Q, k) f32 scores, (Q, k) i32 shard-local row ids), both
-    sorted by the oracle's total order (descending score, ascending index
-    on ties). If valid < k the tail entries are (-inf, int32 max).
-    """
+    scales=None is the exact scan; a (1, N) f32 scales row makes it the
+    int8 first pass. Returns the unpadded ((Q, k) f32, (Q, k) i32)."""
     N, d = table.shape
     Q = queries.shape[0]
-    valid = N if valid is None else valid
-    assert 0 < valid <= N, (valid, N)
-    bn = min(block_n, N)
+    quant = scales is not None
     if N % bn:
-        table = jnp.pad(table, ((0, (-N) % bn), (0, 0)))
+        pad = (-N) % bn
+        table = jnp.pad(table, ((0, pad), (0, 0)))
+        if quant:
+            scales = jnp.pad(scales, ((0, 0), (0, pad)),
+                             constant_values=1.0)
         N = table.shape[0]
-    bq = min(block_q, Q)
     Qp = -(-Q // bq) * bq
     qp = jnp.pad(queries, ((0, Qp - Q), (0, 0)))
     grid = (Qp // bq, N // bn)        # table tiles innermost (sequential)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]       # table (HBM)
+    operands = [table]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, bn), lambda qi, t: (0, t)))
+        operands.append(scales)                             # row scales
+    in_specs.append(pl.BlockSpec((bq, d), lambda qi, t: (qi, 0)))
+    operands.append(qp)                                     # query block
     out_v, out_i = pl.pallas_call(
-        functools.partial(_topk_kernel, k=k, bn=bn, valid=valid),
+        functools.partial(_topk_scan_kernel, k=k, bn=bn, valid=valid,
+                          quant=quant),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),           # table (HBM)
-            pl.BlockSpec((bq, d), lambda qi, t: (qi, 0)),   # query block
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((bq, k), lambda qi, t: (qi, 0)),   # running top-k
             pl.BlockSpec((bq, k), lambda qi, t: (qi, 0)),
@@ -176,8 +246,107 @@ def topk_mips(table, queries, *, k: int, valid: int | None = None,
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
-    )(table, qp)
+    )(*operands)
     return out_v[:Q], out_i[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "valid", "block_q",
+                                             "block_n", "interpret"))
+def topk_mips(table, queries, *, k: int, valid: int | None = None,
+              block_q: int = DEFAULT_BLOCK_Q, block_n: int | None = None,
+              interpret: bool = False):
+    """Exact-MIPS top-k of `queries` against one table shard.
+
+    table: (N, d) HBM-resident shard (bf16 or f32 — scored in f32);
+    queries: (Q, d). `valid` masks padded tail rows (row >= valid scores
+    -inf and can never be returned); rows are padded here to a block_n
+    multiple if the caller didn't (the store pre-pads at load so serving
+    never re-materializes the table). block_n=None sizes the scan tile
+    with :func:`choose_block_n` against the VMEM budget; an explicit
+    block_n is capped (not pinned) by the k-aware plan — the running
+    (bq, k) list is this kernel's own working set, and the store passes
+    its load-time tile (planned at ``DEFAULT_PLAN_K``) for every
+    query-time k.
+
+    Returns ((Q, k) f32 scores, (Q, k) i32 shard-local row ids), both
+    sorted by the oracle's total order (descending score, ascending index
+    on ties). If valid < k the tail entries are (-inf, int32 max).
+    """
+    N, d = table.shape
+    valid = N if valid is None else valid
+    assert 0 < valid <= N, (valid, N)
+    bq = min(block_q, queries.shape[0])
+    planned = choose_block_n(d, table.dtype, k=k, block_q=bq)
+    bn = planned if block_n is None else min(block_n, planned)
+    return _launch_topk_scan(table, None, queries, k=k, valid=valid,
+                             bq=bq, bn=min(bn, N), interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# quantized first pass: int8 tiles through the same double-buffered DMA
+# skeleton, over-fetched running top-m (the two-tier scan's tier one)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("m", "valid", "block_q",
+                                             "block_n", "interpret"))
+def topk_mips_quant(qtable, scales, queries, *, m: int,
+                    valid: int | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_n: int | None = None, interpret: bool = False):
+    """Int8 first-pass scan: approximate top-``m`` candidates per query.
+
+    qtable: (N, d) int8 shard (``quant.quantize_rows``); scales: (N,) f32
+    per-row dequantization scales; queries: (Q, d). The tile-DMA skeleton
+    is :func:`topk_mips`'s (shared ``_topk_scan_kernel`` body), but the
+    streamed tiles are int8 — 4x less HBM traffic per scan — with the
+    per-row scales riding a BlockSpec-pipelined (1, bn) block. Scores are
+    (q @ tile.T) * scale in f32; the dominant error is the quantization
+    itself (bounded per row — see ``quant.quantize_rows``), which the
+    exact second tier absorbs.
+
+    Like the exact kernel, an explicit block_n is capped (not pinned) by
+    the ``m``-aware :func:`choose_block_n` plan: the over-fetched (bq, m)
+    candidate list is this kernel's own working set — a caller passing a
+    tile planned for plain top-k (the store's load-time
+    ``DEFAULT_PLAN_K`` plan) must not silently bust the VMEM budget when
+    ``m = k * overfetch`` runs far past that allowance.
+
+    Returns ((Q, m) f32 approx scores, (Q, m) i32 shard-local row ids) —
+    feed the ids to ``quant.rescore_exact`` for the exact second tier.
+    """
+    N, d = qtable.shape
+    valid = N if valid is None else valid
+    assert 0 < valid <= N, (valid, N)
+    assert qtable.dtype == jnp.int8, qtable.dtype
+    bq = min(block_q, queries.shape[0])
+    planned = choose_block_n(d, qtable.dtype, k=m, block_q=bq)
+    bn = planned if block_n is None else min(block_n, planned)
+    return _launch_topk_scan(qtable, scales.astype(jnp.float32).reshape(1, N),
+                             queries, k=m, valid=valid, bq=bq,
+                             bn=min(bn, N), interpret=interpret)
+
+
+def _masked_select(scores, valid: int, k: int):
+    """Demote rows >= valid to sentinels and run the selection network —
+    the shared tail of the jnp scan paths."""
+    gidx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    invalid = gidx >= valid
+    return select_topk(jnp.where(invalid, NEG_INF, scores),
+                       jnp.where(invalid, IDX_SENTINEL, gidx), k)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "valid"))
+def topk_mips_quant_xla(qtable, scales, queries, *, m: int,
+                        valid: int | None = None):
+    """Plain-jnp int8 first pass: the CPU serving path for the quant tier
+    and the cross-check for :func:`topk_mips_quant` (bitwise identical on
+    integer queries, where every f32 dot is exact; on continuous data an
+    accumulation-order ulp flip at the m-boundary is possible — and
+    harmless, since tier two rescores exactly)."""
+    N = qtable.shape[0]
+    f32 = jnp.float32
+    scores = (queries.astype(f32) @ qtable.astype(f32).T
+              ) * scales.astype(f32).reshape(1, N)
+    return _masked_select(scores, N if valid is None else valid, m)
 
 
 # --------------------------------------------------------------------------
@@ -238,13 +407,9 @@ def topk_mips_xla(table, queries, *, k: int, valid: int | None = None):
     network. The serving path on CPU (Pallas interpret mode is Python-slow)
     and the jnp-level oracle for the kernels."""
     N = table.shape[0]
-    valid = N if valid is None else valid
     f32 = jnp.float32
     scores = queries.astype(f32) @ table.astype(f32).T
-    gidx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    invalid = gidx >= valid
-    return select_topk(jnp.where(invalid, NEG_INF, scores),
-                       jnp.where(invalid, IDX_SENTINEL, gidx), k)
+    return _masked_select(scores, N if valid is None else valid, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -15,6 +15,9 @@ request-latency percentiles, and recall@k against the numpy oracle.
 
 ``--check-recall`` turns the run into a gate (exit 1 below the threshold) —
 that is the CI smoke: trained checkpoint → serve → recall@k == oracle.
+``--quant int8`` builds the int8 tier at load and (with ``--impl auto``)
+serves through the two-tier scan — the same gate then certifies that the
+``--overfetch`` margin loses nothing vs the exact oracle.
 """
 from __future__ import annotations
 
@@ -43,10 +46,18 @@ def main(argv=None):
                          "(fixed shape: one compile, warmed before the "
                          "clock)")
     ap.add_argument("--impl", default="auto",
-                    choices=["auto", "pallas", "rowwise", "xla"],
+                    choices=["auto", "pallas", "rowwise", "xla", "quant",
+                             "quant_pallas", "quant_xla"],
                     help="shard top-k path (auto: pallas on TPU, xla "
                          "elsewhere; pass pallas to force the kernel — "
-                         "interpret mode off-TPU)")
+                         "interpret mode off-TPU; quant* need --quant int8)")
+    ap.add_argument("--quant", default="none", choices=["none", "int8"],
+                    help="build the int8 tier at load; with --impl auto "
+                         "this also routes queries through the two-tier "
+                         "scan (int8 first pass + exact rescore)")
+    ap.add_argument("--overfetch", type=float, default=None,
+                    help="tier-one candidate margin m = ceil(k * overfetch) "
+                         "for the quant path (default quant.DEFAULT_OVERFETCH)")
     ap.add_argument("--metric", default="dot", choices=["dot", "cosine"],
                     help="cosine normalizes table rows at load and query "
                          "vectors at submit; same MIPS kernel either way")
@@ -57,11 +68,27 @@ def main(argv=None):
                     help="exit 1 if recall@k vs the oracle is below this")
     args = ap.parse_args(argv)
 
+    from repro.embed_serve import quant as qz
+
+    quant = None if args.quant == "none" else args.quant
+    impl = args.impl
+    if quant and impl == "auto":
+        impl = "quant"            # the tier was built to be used
+    if impl.startswith("quant") and not quant:
+        ap.error(f"--impl {impl} requires --quant int8")
+    if args.overfetch is not None and not quant:
+        # silently serving the exact path would let a recall-gate run
+        # "validate" an overfetch margin that was never exercised
+        ap.error("--overfetch requires --quant int8")
     store = ShardedEmbeddingStore.load(
-        args.ckpt, table=args.table, normalize=args.metric == "cosine")
+        args.ckpt, table=args.table, normalize=args.metric == "cosine",
+        quant=quant,
+        overfetch=(qz.DEFAULT_OVERFETCH if args.overfetch is None
+                   else args.overfetch))
+    tier = f", int8 tier (overfetch {store.overfetch:g})" if quant else ""
     print(f"loaded {args.table} table: {store.num_nodes} x {store.dim} "
           f"{store.host_table.dtype} over {len(store.shards)} shard(s) "
-          f"(step {store.step})")
+          f"(step {store.step}){tier}")
 
     rng = np.random.default_rng(args.seed)
     rows = rng.integers(0, store.num_nodes, size=args.queries)
@@ -72,7 +99,7 @@ def main(argv=None):
         queries /= np.linalg.norm(queries, axis=1, keepdims=True) + 1e-12
 
     def serve_fn(q):
-        return store.topk(q, args.k, impl=args.impl)
+        return store.topk(q, args.k, impl=impl)
 
     # fixed_batch: every backend call is padded to max_batch rows, so the
     # shape-specialized (jitted) path compiles exactly once — here, before
