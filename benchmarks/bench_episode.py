@@ -37,8 +37,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax                                                   # noqa: E402
 
 from common import append_run                                # noqa: E402
-from repro.core import (HybridConfig, HybridEmbeddingTrainer,   # noqa: E402
-                        build_episode_blocks)
+from repro.core import (EpisodePipeline, HybridConfig,          # noqa: E402
+                        HybridEmbeddingTrainer, build_episode_blocks)
+from repro.graph.generators import powerlaw_graph            # noqa: E402
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine  # noqa: E402
 
 IMPLS = ("ref", "pallas", "pallas_fused2")
 
@@ -46,6 +48,11 @@ IMPLS = ("ref", "pallas", "pallas_fused2")
 FULL_SHAPES = [(64, 64), (64, 128), (128, 128)]
 SMOKE_SHAPES = [(32, 32)]
 MESHES = [(1, 1), (1, 2)]
+
+# the end-to-end dataflow comparison (walks + build + stage + train) measures
+# the host pipeline, not the kernels — one impl is enough
+DATAFLOW_SHAPES = [(64, 64)]
+DATAFLOW_SMOKE_SHAPES = [(32, 32)]
 
 
 def bench_one(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
@@ -77,6 +84,166 @@ def bench_one(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
     }
 
 
+def _overlap_efficiency(train_s, wall_s):
+    """Fraction of the timed epoch spent in device training rather than
+    stalled on host dataflow stages: 1.0 = walks / block builds / staging
+    fully hidden behind training, lower = the consumer sat waiting on host
+    work. Both quantities are measured INSIDE the timed window and the
+    formula is identical for sync and streamed rows, so the number is
+    comparable across modes (busy-second columns like walk_s can include
+    work that ran ahead of the window and would over-credit a ratio built
+    from them)."""
+    if wall_s <= 0:
+        return 1.0
+    return max(0.0, min(1.0, train_s / wall_s))
+
+
+def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
+                   episodes: int, walk_workers: int, depth: int,
+                   dtype: str, seed: int = 0):
+    """End-to-end epoch through the full dataflow, sync vs streamed.
+
+    sync     — serial walks (workers=1), then per episode: build, stage,
+               train, all on the consumer thread (the pre-PR-5 path).
+    streamed — multi-worker walk engine putting episodes as they complete
+               into a bounded store, consumed through the multi-stage
+               EpisodePipeline (walk-wait -> build -> device staging) while
+               the trainer runs.
+
+    Both modes time epoch 2 (identical sample stream — the chunk
+    decomposition and RNG keying are worker-count-invariant) with the same
+    pinned block_cap, so they compile once and train identical blocks; any
+    cap overflow drops the same pairs in both modes (reported as `dropped`).
+    """
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    cfg = HybridConfig(dim=d, minibatch=B, negatives=8, subparts=2,
+                       neg_pool=2048, impl=impl, dtype=dtype, seed=seed)
+    g = powerlaw_graph(nodes, 5, seed=seed)
+    trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                     degrees=g.degrees())
+    trainer.init_embeddings()
+
+    def wcfg(workers):
+        # node2vec walks (rejection-sampled 2nd-order steps) — the paper's
+        # production mode and a walk stage with real cost to overlap
+        return WalkConfig(walk_length=8, window=4, episodes=episodes,
+                          seed=seed, workers=workers, walks_per_node=2,
+                          node2vec_p=0.5, node2vec_q=2.0,
+                          chunk_size=max(256, nodes // 8))
+
+    # pre-pass on epoch 0: pin the block shape (headroom so the measured
+    # epoch rarely drops; any overflow drops identically in both modes
+    # and is reported) and warm up the compile cache
+    store = MemorySampleStore()
+    WalkEngine(g, wcfg(1), store).run_epoch(0)
+    cap = 0
+    for ep in range(episodes):
+        eb = build_episode_blocks(np.asarray(store.get(0, ep)), trainer.part,
+                                  pad_multiple=B)
+        cap = max(cap, int(eb.counts.max()))
+    cap += B                                     # headroom for later epochs
+    warm = build_episode_blocks(np.asarray(store.get(0, 0)), trainer.part,
+                                block_cap=cap, pad_multiple=B)
+    trainer.train_episode(warm)
+    store.drop_epoch(0)
+
+    rows = []
+
+    # ---- sync: everything on the consumer thread, walks first. Times
+    # epoch 2 — the same epoch (same sample stream) the streamed mode times.
+    eng = WalkEngine(g, wcfg(1), store)
+    t0 = time.perf_counter()
+    eng.run_epoch(2)
+    walk_s = sum(eng.episode_walk_s.values())
+    build_s = stage_s = train_s = 0.0
+    n_samples = dropped = 0
+    for ep in range(episodes):
+        pairs = np.asarray(store.get(2, ep))
+        t = time.perf_counter()
+        eb = build_episode_blocks(pairs, trainer.part, block_cap=cap,
+                                  pad_multiple=B)
+        build_s += time.perf_counter() - t
+        t = time.perf_counter()
+        staged = trainer.stage_blocks(eb)
+        stage_s += time.perf_counter() - t
+        t = time.perf_counter()
+        trainer.train_episode(staged)            # float(loss) = full sync
+        train_s += time.perf_counter() - t
+        n_samples += staged.num_samples
+        dropped += eb.dropped
+    wall_s = time.perf_counter() - t0
+    store.drop_epoch(2)
+    rows.append({
+        "mode": "sync", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": 1, "pipeline_depth": 0,
+        "walk_s": walk_s, "walk_wait_s": walk_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": None,
+    })
+
+    # ---- streamed: bounded store, async multi-worker walks, staged pipeline.
+    # Steady-state timing: epoch 1 fills the pipeline and (as in production —
+    # the paper walks one epoch ahead) epoch 2's walker starts as soon as
+    # epoch 1's finishes, so the timed epoch sees the dataflow a long-running
+    # job sees, not the one-time cold-start fill.
+    store = MemorySampleStore(depth=depth + 1)
+    pipe = EpisodePipeline(store, trainer.part, pad_multiple=B,
+                           block_cap=cap, depth=depth,
+                           stage_fn=trainer.stage_blocks, drop_consumed=True)
+    eng = WalkEngine(g, wcfg(walk_workers), store)
+    eng.start_async(1)
+    eng2 = None
+    for ep in range(episodes):                  # warm epoch (untimed)
+        pipe.prefetch_window(1, ep, episodes)
+        trainer.train_episode(pipe.get(1, ep))
+        if eng2 is None and eng.finished():
+            eng.join()
+            eng2 = WalkEngine(g, wcfg(walk_workers), store)
+            eng2.start_async(2)
+    eng.join()
+    if eng2 is None:
+        eng2 = WalkEngine(g, wcfg(walk_workers), store)
+        eng2.start_async(2)
+    store.drop_epoch(1)
+
+    t0 = time.perf_counter()
+    walk_wait_s = build_s = stage_s = train_s = 0.0
+    n_samples = dropped = 0
+    for ep in range(episodes):                  # timed steady-state epoch
+        pipe.prefetch_window(2, ep, episodes)
+        staged = pipe.get(2, ep)
+        times = pipe.pop_times(2, ep)
+        t = time.perf_counter()
+        trainer.train_episode(staged)
+        train_s += time.perf_counter() - t
+        walk_wait_s += times.get("walk_wait_s", 0.0)
+        build_s += times.get("build_s", 0.0)
+        stage_s += times.get("stage_s", 0.0)
+        n_samples += staged.num_samples
+        dropped += staged.dropped
+    wall_s = time.perf_counter() - t0
+    eng2.join()
+    walk_s = sum(t for (e, _), t in eng2.episode_walk_s.items() if e == 2)
+    store.drop_epoch(2)
+    pipe.close()
+    rows.append({
+        "mode": "streamed", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": walk_workers, "pipeline_depth": depth,
+        "walk_s": walk_s, "walk_wait_s": walk_wait_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": store.peak_resident,
+    })
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -91,6 +258,14 @@ def main():
     # where it's native
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
+    # leave a core for the trainer: extra walker threads on a small box just
+    # thrash the GIL (the node2vec rejection loop is Python-heavy)
+    ap.add_argument("--walk-workers", type=int,
+                    default=max(1, min(4, (os.cpu_count() or 2) - 1)))
+    ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--dataflow-episodes", type=int, default=None)
+    ap.add_argument("--no-dataflow", action="store_true",
+                    help="skip the sync-vs-streamed dataflow comparison")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_episode.json"))
     args = ap.parse_args()
@@ -126,6 +301,36 @@ def main():
                 print(f"WARNING: fused2 slower than pallas at {key}: "
                       f"{v['pallas_fused2']:.1f} < {v['pallas']:.1f}")
 
+    # ---- end-to-end dataflow: sync vs streamed over the same epoch
+    dataflow_results = []
+    if not args.no_dataflow:
+        df_shapes = DATAFLOW_SMOKE_SHAPES if args.smoke else DATAFLOW_SHAPES
+        # 4+ episodes so the warm epoch is long enough for the next epoch's
+        # walker to get ahead (2 episodes end before it even starts)
+        df_eps = args.dataflow_episodes or 4
+        # below ~2048 nodes an epoch is <100 ms and fixed thread overhead
+        # drowns the structural comparison — keep the dataflow rows at a
+        # scale where per-stage times mean something, even in smoke
+        df_nodes = args.nodes or 2048
+        for (B, d) in df_shapes:
+            rows = bench_dataflow(
+                "ref", B, d, MESHES[0], nodes=df_nodes, episodes=df_eps,
+                walk_workers=args.walk_workers, depth=args.pipeline_depth,
+                dtype=args.dtype)
+            dataflow_results.extend(rows)
+            for r in rows:
+                print(f"dataflow B={r['B']:4d} d={r['d']:4d} "
+                      f"{r['mode']:8s} {r['samples_per_s']:10.1f} samples/s  "
+                      f"walk {r['walk_s']:.2f}s build {r['build_s']:.2f}s "
+                      f"stage {r['stage_s']:.2f}s train {r['train_s']:.2f}s "
+                      f"wall {r['wall_s']:.2f}s "
+                      f"overlap {r['overlap_efficiency']:.2f}")
+            by_mode = {r["mode"]: r["samples_per_s"] for r in rows}
+            if by_mode.get("streamed", 0) < by_mode.get("sync", 0):
+                print(f"WARNING: streamed slower than sync at "
+                      f"B={B} d={d}: {by_mode['streamed']:.1f} < "
+                      f"{by_mode['sync']:.1f}")
+
     run = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "smoke": args.smoke,
@@ -140,6 +345,7 @@ def main():
                  "CPU — compare across PRs on the same container, "
                  "absolute numbers on TPU"),
         "results": results,
+        "dataflow_results": dataflow_results,
     }
     n = append_run(args.out, "sgns_episode", run)
     print(f"wrote {os.path.abspath(args.out)} "

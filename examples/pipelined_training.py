@@ -1,7 +1,12 @@
-"""End-to-end driver with the full pipeline (paper Fig. 2+3): the decoupled
-walk engine produces epoch e+1 on a worker thread WHILE the trainer consumes
-epoch e, episode blocks are prefetched one step ahead, and checkpoints are
-written periodically.
+"""End-to-end driver with the full streaming pipeline (paper Fig. 2+3): the
+decoupled walk engine shards each episode's walks over a worker pool and
+streams episodes into a BOUNDED sample store as they complete, the
+multi-stage episode pipeline (walk-wait -> block-build -> device staging)
+keeps `--pipeline-depth` episodes in flight, and the trainer consumes staged
+blocks — so episode e's training overlaps episode e+1's walks, and peak
+sample memory is O(depth · episode) rather than O(epoch). Walks for epoch
+e+1 start the moment epoch e's walker finishes, just like the paper's
+one-epoch-ahead pipelining.
 
     PYTHONPATH=src python examples/pipelined_training.py --epochs 10
 """
@@ -12,8 +17,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (EpisodePipeline, HybridConfig, HybridEmbeddingTrainer,
-                        build_episode_blocks)
+from repro.core import EpisodePipeline, HybridConfig, HybridEmbeddingTrainer
 from repro.graph.generators import powerlaw_graph
 from repro.train.checkpoint import save_checkpoint
 from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
@@ -24,6 +28,8 @@ def main():
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--episodes", type=int, default=4)
     ap.add_argument("--nodes", type=int, default=5000)
+    ap.add_argument("--walk-workers", type=int, default=2)
+    ap.add_argument("--pipeline-depth", type=int, default=2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
 
@@ -38,35 +44,48 @@ def main():
                                      degrees=g.degrees())
     trainer.init_embeddings()
 
-    store = MemorySampleStore()
-    wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes)
-    pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch)
+    # bounded store: the walker can run at most depth+1 episodes ahead of
+    # the pipeline's drops
+    store = MemorySampleStore(depth=args.pipeline_depth + 1)
+    wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes,
+                      workers=args.walk_workers)
+    # three stages, each on its own worker: store.get (walk-wait), 2D block
+    # build, device_put staging; drop_consumed frees the walker's slots
+    pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch,
+                           depth=args.pipeline_depth,
+                           stage_fn=trainer.stage_blocks, drop_consumed=True)
     os.makedirs(args.ckpt_dir, exist_ok=True)
 
-    # prime the pipeline: walks for epoch 0
+    # prime the pipeline: walks for epoch 0 stream in episode by episode
     engine = WalkEngine(g, wcfg, store)
     engine.start_async(0)
 
     for epoch in range(args.epochs):
-        # (stage 7 analogue) kick off NEXT epoch's walks while training
-        engine.join()
-        if epoch + 1 < args.epochs:
-            next_engine = WalkEngine(g, wcfg, store)
-            next_engine.start_async(epoch + 1)
         t0 = time.perf_counter()
-        pipe.prefetch(epoch, 0)
+        nxt = None
         losses = []
         for ep in range(args.episodes):
-            eb = pipe.get(epoch, ep)             # (stage 5: prefetched)
-            if ep + 1 < args.episodes:
-                pipe.prefetch(epoch, ep + 1)
+            pipe.prefetch_window(epoch, ep, args.episodes)  # keep depth full
+            staged = pipe.get(epoch, ep)     # stage 5: prefetched + staged
             losses.append(trainer.train_episode(
-                eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+                staged, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+            # stage 7 analogue: next epoch's walks launch as soon as this
+            # epoch's walker is done (the bounded store paces it)
+            if nxt is None and epoch + 1 < args.epochs and engine.finished():
+                engine.join()
+                nxt = WalkEngine(g, wcfg, store)
+                nxt.start_async(epoch + 1)
+        engine.join()
+        if nxt is None and epoch + 1 < args.epochs:
+            nxt = WalkEngine(g, wcfg, store)
+            nxt.start_async(epoch + 1)
         store.drop_epoch(epoch)
         print(f"epoch {epoch:3d}  loss {np.mean(losses):.4f}  "
-              f"{time.perf_counter() - t0:.2f}s (walks overlapped)")
+              f"{time.perf_counter() - t0:.2f}s "
+              f"(walks streamed, peak resident episodes "
+              f"{store.peak_resident})")
         if epoch + 1 < args.epochs:
-            engine = next_engine
+            engine = nxt
         if (epoch + 1) % 5 == 0:
             path = os.path.join(args.ckpt_dir, f"emb_{epoch+1}.npz")
             save_checkpoint(path, {"vertex": trainer.embeddings(),

@@ -1,13 +1,14 @@
 """The paper's primary contribution: hybrid model-data parallel node-embedding
 training with hierarchical partitioning, two-level ring rotation, and a
 pipelined episode trainer. See DESIGN.md §1/§5."""
-from repro.core.hybrid import HybridConfig, HybridEmbeddingTrainer, build_episode_fn
+from repro.core.hybrid import (HybridConfig, HybridEmbeddingTrainer,
+                               StagedEpisodeBlocks, build_episode_fn)
 from repro.core.partition import NodePartition, EpisodeBlocks, build_episode_blocks
 from repro.core.baseline_ps import ParameterServerTrainer
 from repro.core.pipeline import EpisodePipeline
 
 __all__ = [
-    "HybridConfig", "HybridEmbeddingTrainer", "build_episode_fn",
-    "NodePartition", "EpisodeBlocks", "build_episode_blocks",
-    "ParameterServerTrainer", "EpisodePipeline",
+    "HybridConfig", "HybridEmbeddingTrainer", "StagedEpisodeBlocks",
+    "build_episode_fn", "NodePartition", "EpisodeBlocks",
+    "build_episode_blocks", "ParameterServerTrainer", "EpisodePipeline",
 ]

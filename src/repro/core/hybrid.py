@@ -63,6 +63,19 @@ class HybridConfig:
     fuse_subpart_permute: bool = True   # False -> one whole-shard ppermute/round
 
 
+@dataclasses.dataclass(frozen=True)
+class StagedEpisodeBlocks:
+    """An episode's block layout already device_put with the episode-step
+    shardings — the output of the pipeline's staging stage, accepted by
+    ``train_episode`` directly so the H2D copies happen on a pipeline worker
+    instead of the training loop's critical path."""
+
+    blocks: object                 # jax.Array, sharded like eb.blocks
+    counts: object                 # jax.Array, sharded like eb.counts
+    num_samples: int               # host-side valid-sample count (logging)
+    dropped: int = 0
+
+
 def _shift_perm(n: int) -> list[tuple[int, int]]:
     return [(i, (i + 1) % n) for i in range(n)]
 
@@ -254,17 +267,29 @@ class HybridEmbeddingTrainer:
         return self._built
 
     # ---------------------------------------------------------------- train
-    def train_episode(self, eb: EpisodeBlocks, *, lr: float | None = None) -> float:
+    def stage_blocks(self, eb: EpisodeBlocks) -> StagedEpisodeBlocks:
+        """device_put an episode's blocks with the episode-step shardings.
+        Safe to call from a pipeline worker thread — the H2D copies then
+        overlap the previous episode's device compute."""
+        _, sh = self._episode_fn()
+        return StagedEpisodeBlocks(
+            blocks=jax.device_put(eb.blocks, sh["blocks"]),
+            counts=jax.device_put(eb.counts, sh["blocks"]),
+            num_samples=int(eb.counts.sum()),
+            dropped=eb.dropped)
+
+    def train_episode(self, eb: EpisodeBlocks | StagedEpisodeBlocks,
+                      *, lr: float | None = None) -> float:
         fn, sh = self._episode_fn()
-        blocks = jax.device_put(eb.blocks, sh["blocks"])
-        counts = jax.device_put(eb.counts, sh["blocks"])
+        if not isinstance(eb, StagedEpisodeBlocks):
+            eb = self.stage_blocks(eb)
         pool = jax.device_put(self.pool, sh["blocks"])
         seed = jax.device_put(
             np.array([self.cfg.seed], np.int32), sh["replicated"])
         lr_arr = jax.device_put(
             np.float32(self.cfg.lr if lr is None else lr), sh["replicated"])
         self.vert, self.ctx, loss = fn(
-            self.vert, self.ctx, blocks, counts, pool, seed, lr_arr)
+            self.vert, self.ctx, eb.blocks, eb.counts, pool, seed, lr_arr)
         return float(loss)
 
     def embeddings(self) -> np.ndarray:

@@ -100,17 +100,14 @@ class EpisodeBlocks:
         return int(self.blocks.shape[-2])
 
 
-def build_episode_blocks(pairs: np.ndarray, part: NodePartition, *,
-                         block_cap: int | None = None,
-                         pad_multiple: int = 64) -> EpisodeBlocks:
-    """Bucket (u, v) pairs into the rotation-schedule block layout."""
+def _pair_cells(pairs: np.ndarray, part: NodePartition):
+    """(u, v) pairs -> (flat cell id, vertex subrow, context row) arrays."""
     dims = part.dims
     P = part.num_shards
     k = part.subparts
     u, v = pairs[:, 0].astype(np.int64), pairs[:, 1].astype(np.int64)
     v_shard, v_sub, v_subrow = part.locate(u)           # u indexes vertex table
-    c_shard = v  # context side: shard id then local row
-    c_shard, _, _ = part.locate(v)
+    c_shard, _, _ = part.locate(v)  # context side: shard id then local row
     c_row = v % part.padded_rows_per_shard
 
     # the device that trains a pair is the context owner (contexts are pinned)
@@ -124,28 +121,79 @@ def build_episode_blocks(pairs: np.ndarray, part: NodePartition, *,
         rnd_flat = rnd_flat * n + c
 
     cell = (dev * P + rnd_flat) * k + v_sub              # flat cell id
+    return cell, v_subrow, c_row
+
+
+# pairs per chunk of the two-pass builder: bounds the transient per-chunk
+# index arrays (~6 int64 vectors) to ~50 MB regardless of episode size
+BUILD_CHUNK_PAIRS = 1 << 20
+
+
+def build_episode_blocks(pairs: np.ndarray, part: NodePartition, *,
+                         block_cap: int | None = None,
+                         pad_multiple: int = 64,
+                         chunk: int | None = None) -> EpisodeBlocks:
+    """Bucket (u, v) pairs into the rotation-schedule block layout.
+
+    Two streaming passes over ``chunk``-sized pair slices (default
+    ``BUILD_CHUNK_PAIRS``): a counting pass fixes per-cell counts and the
+    block capacity, then a scatter pass writes each slice straight into the
+    preallocated block tensor — peak transient memory is O(chunk), not
+    O(episode), and the output is bitwise identical for any chunk size
+    (a pair's slot is its occurrence index within its cell in pair order).
+
+    ``block_cap`` both caps AND pins the per-cell capacity: when set, every
+    episode gets the same (cap rounded up to ``pad_multiple``) block shape
+    even if its cells are emptier, so a streaming consumer compiles the
+    episode step once instead of re-lowering per episode.
+    """
+    P = part.num_shards
+    k = part.subparts
+    n = pairs.shape[0]
     n_cells = P * P * k
-    order = np.argsort(cell, kind="stable")
-    cell_sorted = cell[order]
-    counts_flat = np.bincount(cell_sorted, minlength=n_cells)
-    bmax = int(counts_flat.max(initial=0))
+    chunk = BUILD_CHUNK_PAIRS if chunk is None else max(1, chunk)
+    # common case: the episode fits in one chunk — compute the cell ids once
+    # and share them between the two passes instead of re-deriving
+    one_shot = _pair_cells(pairs, part) if n <= chunk else None
+
+    # pass 1: count pairs per cell
+    counts_flat = np.zeros(n_cells, dtype=np.int64)
+    if one_shot is not None:
+        counts_flat += np.bincount(one_shot[0], minlength=n_cells)
+    else:
+        for lo in range(0, n, chunk):
+            cell, _, _ = _pair_cells(pairs[lo: lo + chunk], part)
+            counts_flat += np.bincount(cell, minlength=n_cells)
+
     if block_cap is not None:
-        bmax = min(bmax, block_cap)
+        bmax = block_cap          # pinned: static shape across episodes
+    else:
+        bmax = int(counts_flat.max(initial=0))
     bmax = max(pad_multiple, -(-bmax // pad_multiple) * pad_multiple)
 
-    starts = np.zeros(n_cells + 1, dtype=np.int64)
-    np.cumsum(counts_flat, out=starts[1:])
-    rank = np.arange(cell.size, dtype=np.int64) - starts[cell_sorted]
-    keep = rank < bmax
-    dropped = int((~keep).sum())
-
+    # pass 2: chunked scatter. `fill` carries per-cell occupancy across
+    # chunks so a pair's rank equals its rank in the one-shot sorted build.
     blocks = np.zeros((n_cells, bmax, 2), dtype=np.int32)
-    sel = order[keep]
-    blocks[cell_sorted[keep], rank[keep], 0] = v_subrow[sel]
-    blocks[cell_sorted[keep], rank[keep], 1] = c_row[sel]
+    fill = np.zeros(n_cells, dtype=np.int64)
+    dropped = 0
+    lstarts = np.zeros(n_cells + 1, dtype=np.int64)
+    for lo in range(0, n, chunk):
+        cell, v_subrow, c_row = (one_shot if one_shot is not None
+                                 else _pair_cells(pairs[lo: lo + chunk], part))
+        order = np.argsort(cell, kind="stable")
+        cs = cell[order]
+        local_counts = np.bincount(cs, minlength=n_cells)
+        np.cumsum(local_counts, out=lstarts[1:])
+        rank = fill[cs] + (np.arange(cs.size, dtype=np.int64) - lstarts[cs])
+        keep = rank < bmax
+        dropped += int((~keep).sum())
+        sel = order[keep]
+        blocks[cs[keep], rank[keep], 0] = v_subrow[sel]
+        blocks[cs[keep], rank[keep], 1] = c_row[sel]
+        fill += local_counts
     counts = np.minimum(counts_flat, bmax).astype(np.int32)
 
-    Q_D_M = tuple(dims)
+    Q_D_M = tuple(part.dims)
     blocks = blocks.reshape(P, *Q_D_M, k, bmax, 2)
     counts = counts.reshape(P, *Q_D_M, k)
     return EpisodeBlocks(blocks=blocks, counts=counts, dropped=dropped)

@@ -1,15 +1,27 @@
-"""Episode pipeline: overlap host-side block building + H2D staging with
-device compute (paper §III-C, Fig. 3 stages 5/7).
+"""Episode pipeline: overlap host-side walk-wait, block building and H2D
+staging with device compute (paper §III-C, Fig. 3 stages 5/7).
 
 On TPU+JAX the intra-episode overlap (stages 2/4/6) is XLA's async collective
 scheduling inside the jitted episode step; what remains for the host is
-preparing episode e+1 (walk consumption, 2D bucketing, device_put) while
-episode e trains. ``EpisodePipeline`` does exactly that with one worker
-thread: jax dispatch is async, so `train_episode` returns as soon as the step
-is enqueued and the worker's `device_put`s interleave with device compute.
+preparing upcoming episodes (walk consumption, 2D bucketing, device_put)
+while the current one trains. ``EpisodePipeline`` runs that as a bounded
+multi-stage pipeline:
+
+    walk-wait (store.get)  ->  block-build (2D bucketing)  ->  device staging
+
+Each stage has its own worker pool, so episode e+1's walk-wait overlaps
+episode e's build which overlaps episode e-1's staging; ``depth`` bounds how
+many episodes are in flight at once. Prefetches are keyed by
+(epoch, episode): a ``get`` for anything not in flight falls back to a
+synchronous build instead of handing back the wrong episode's blocks.
+jax dispatch is async, so ``train_episode`` returns as soon as the step is
+enqueued and the staging workers' ``device_put``s interleave with device
+compute.
 """
 from __future__ import annotations
 
+import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -18,45 +30,136 @@ from repro.core.partition import NodePartition, build_episode_blocks
 
 
 class EpisodePipeline:
-    """Prefetches episode blocks one step ahead of training."""
+    """Bounded multi-stage prefetcher for episode blocks.
+
+    Parameters
+    ----------
+    store : SampleStore — walk-engine output, keyed (epoch, episode).
+    part, pad_multiple, block_cap, build_chunk — block-build geometry
+        (forwarded to :func:`build_episode_blocks`; pass ``block_cap`` to pin
+        the block shape so streaming consumers compile once).
+    depth : max episodes in flight (prefetched but not yet consumed).
+    stage_fn : optional third-stage callable ``EpisodeBlocks -> staged``
+        (e.g. ``HybridEmbeddingTrainer.stage_blocks`` for device_put); when
+        None the pipeline is two-stage and ``get`` returns EpisodeBlocks.
+    drop_consumed : call ``store.drop(epoch, episode)`` once the build stage
+        has bucketed the pairs — with a bounded store this is what frees the
+        walker's backpressure slots.
+    workers_per_stage : worker threads per stage pool.
+    """
 
     def __init__(self, store, part: NodePartition, *, pad_multiple: int,
-                 block_cap: int | None = None):
+                 block_cap: int | None = None, depth: int = 2,
+                 stage_fn=None, drop_consumed: bool = False,
+                 build_chunk: int | None = None, workers_per_stage: int = 1):
         self.store = store
         self.part = part
         self.pad_multiple = pad_multiple
         self.block_cap = block_cap
-        self._pool = ThreadPoolExecutor(max_workers=1)
-        self._next = None
+        self.build_chunk = build_chunk
+        self.depth = max(1, depth)
+        self.stage_fn = stage_fn
+        self.drop_consumed = drop_consumed
+        w = max(1, workers_per_stage)
+        self._fetch_pool = ThreadPoolExecutor(w, thread_name_prefix="ep-fetch")
+        self._build_pool = ThreadPoolExecutor(w, thread_name_prefix="ep-build")
+        self._stage_pool = (ThreadPoolExecutor(w, thread_name_prefix="ep-stage")
+                            if stage_fn is not None else None)
+        self._inflight: dict[tuple[int, int], object] = {}
+        self._times: dict[tuple[int, int], dict] = {}
+        self._times_mu = threading.Lock()   # stage workers write concurrently
 
-    def _build(self, epoch: int, episode: int):
+    def _record(self, key, stage, seconds):
+        with self._times_mu:
+            self._times.setdefault(key, {})[stage] = seconds
+
+    # ------------------------------------------------------------- stages
+    def _fetch(self, key):
+        t0 = time.perf_counter()
+        pairs = self.store.get(*key)
+        self._record(key, "walk_wait_s", time.perf_counter() - t0)
+        return pairs
+
+    def _build_from(self, key, fetch_fut):
+        pairs = fetch_fut.result()
+        t0 = time.perf_counter()
+        eb = build_episode_blocks(
+            np.asarray(pairs), self.part, block_cap=self.block_cap,
+            pad_multiple=self.pad_multiple, chunk=self.build_chunk)
+        self._record(key, "build_s", time.perf_counter() - t0)
+        if self.drop_consumed:
+            self.store.drop(*key)   # pairs are bucketed; free the slot
+        return eb
+
+    def _stage_from(self, key, build_fut):
+        eb = build_fut.result()
+        t0 = time.perf_counter()
+        staged = self.stage_fn(eb)
+        self._record(key, "stage_s", time.perf_counter() - t0)
+        return staged
+
+    def _build_sync(self, epoch: int, episode: int):
         pairs = self.store.get(epoch, episode)
-        return build_episode_blocks(
-            np.asarray(pairs), self.part,
-            block_cap=self.block_cap, pad_multiple=self.pad_multiple)
+        eb = build_episode_blocks(
+            np.asarray(pairs), self.part, block_cap=self.block_cap,
+            pad_multiple=self.pad_multiple, chunk=self.build_chunk)
+        if self.drop_consumed:
+            self.store.drop(epoch, episode)
+        return self.stage_fn(eb) if self.stage_fn is not None else eb
 
-    def prefetch(self, epoch: int, episode: int) -> None:
-        self._next = ((epoch, episode),
-                      self._pool.submit(self._build, epoch, episode))
+    # ---------------------------------------------------------------- API
+    def prefetch(self, epoch: int, episode: int) -> bool:
+        """Enqueue (epoch, episode) through the stage chain. Idempotent; a
+        no-op (returns False) when already in flight or ``depth`` is full."""
+        key = (epoch, episode)
+        if key in self._inflight:
+            return False
+        if len(self._inflight) >= self.depth:
+            return False
+        f = self._fetch_pool.submit(self._fetch, key)
+        f = self._build_pool.submit(self._build_from, key, f)
+        if self._stage_pool is not None:
+            f = self._stage_pool.submit(self._stage_from, key, f)
+        self._inflight[key] = f
+        return True
+
+    def prefetch_window(self, epoch: int, episode: int, num_episodes: int) -> None:
+        """Keep the next ``depth`` episodes of the epoch in flight."""
+        for ep in range(episode, min(episode + self.depth, num_episodes)):
+            self.prefetch(epoch, ep)
 
     def get(self, epoch: int, episode: int):
-        """Returns the prefetched blocks (or builds synchronously on miss).
+        """Returns the prefetched (staged) blocks, building synchronously on
+        a miss. The prefetch is keyed by (epoch, episode): asking for a key
+        that was never prefetched leaves other in-flight prefetches (e.g.
+        later episodes of a depth-window) untouched and falls back to a
+        synchronous build, instead of silently handing back the wrong
+        episode's blocks."""
+        fut = self._inflight.pop((epoch, episode), None)
+        if fut is not None:
+            out = fut.result()
+        else:
+            out = self._build_sync(epoch, episode)
+        # keep timing entries only for episodes still in flight + this one
+        live = set(self._inflight) | {(epoch, episode)}
+        with self._times_mu:
+            for k in [k for k in self._times if k not in live]:
+                del self._times[k]
+        return out
 
-        The prefetch is keyed by (epoch, episode): asking for anything else
-        than what was prefetched discards the stale future (cancelled if it
-        hasn't started; otherwise it finishes idle on the worker) and falls
-        back to a synchronous build, instead of silently handing back the
-        wrong episode's blocks."""
-        if self._next is not None:
-            (key, fut), self._next = self._next, None
-            if key == (epoch, episode):
-                return fut.result()
-            fut.cancel()
-        return self._build(epoch, episode)
+    def pop_times(self, epoch: int, episode: int) -> dict:
+        """Per-stage seconds recorded for a consumed episode:
+        ``walk_wait_s`` (blocked in store.get), ``build_s``, ``stage_s``
+        (absent for sync-built or two-stage episodes)."""
+        with self._times_mu:
+            return self._times.pop((epoch, episode), {})
 
     def close(self):
-        """Shut down the worker, waiting for any in-flight build: a prefetch
+        """Shut down the stage workers, waiting for in-flight work: a build
         racing interpreter teardown can die inside numpy with the module
-        half-unloaded. Queued-but-unstarted builds are cancelled."""
-        self._pool.shutdown(wait=True, cancel_futures=True)
-        self._next = None
+        half-unloaded. Queued-but-unstarted futures are cancelled."""
+        for pool in (self._fetch_pool, self._build_pool, self._stage_pool):
+            if pool is not None:
+                pool.shutdown(wait=True, cancel_futures=True)
+        self._inflight.clear()
+        self._times.clear()

@@ -1,4 +1,6 @@
 from repro.graph.csr import CSRGraph, build_csr
-from repro.graph.generators import rmat_graph, powerlaw_graph, mesh_graph
+from repro.graph.generators import (rmat_graph, powerlaw_graph, mesh_graph,
+                                    sbm_graph)
 
-__all__ = ["CSRGraph", "build_csr", "rmat_graph", "powerlaw_graph", "mesh_graph"]
+__all__ = ["CSRGraph", "build_csr", "rmat_graph", "powerlaw_graph",
+           "mesh_graph", "sbm_graph"]

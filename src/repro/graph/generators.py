@@ -5,6 +5,10 @@
 * :func:`powerlaw_graph`  — preferential-attachment social-network-like graph
   (the "generated A/B/C" family: "resemble the topology of real-world social
   networks").
+* :func:`sbm_graph`       — stochastic block model with planted communities;
+  the topology behind the paper's link-prediction AUC claims (Table IV) —
+  held-out edges are predictable from learned embeddings, which makes it the
+  graph to use when an AUC number has to MEAN something (CI sanity gates).
 """
 from __future__ import annotations
 
@@ -77,4 +81,24 @@ def powerlaw_graph(n: int, m_per_node: int = 4, *, seed: int = 0) -> CSRGraph:
         pool_size += 2 * nb * m_per_node
         v += nb
     edges = np.stack([np.concatenate(src_list), np.concatenate(dst_list)], axis=1)
+    return build_csr(edges, n)
+
+
+def sbm_graph(n: int, communities: int = 12, *, p_in: float = 0.08,
+              p_out: float = 0.001, rounds: int = 30, batch: int = 20000,
+              seed: int = 0) -> CSRGraph:
+    """Stochastic block model: `communities` planted groups, intra-community
+    edges kept with `p_in`, cross-community with `p_out` (rejection-sampled
+    in `rounds` batches of `batch` candidate pairs, so expected edges scale
+    with rounds·batch rather than n²)."""
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, communities, n)
+    src, dst = [], []
+    for _ in range(rounds):
+        a = rng.integers(0, n, batch)
+        b = rng.integers(0, n, batch)
+        keep = rng.random(batch) < np.where(comm[a] == comm[b], p_in, p_out)
+        src.append(a[keep])
+        dst.append(b[keep])
+    edges = np.stack([np.concatenate(src), np.concatenate(dst)], axis=1)
     return build_csr(edges, n)

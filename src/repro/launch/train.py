@@ -30,16 +30,22 @@ def train_embedding(args):
     import jax
     from repro.configs.tencent_embedding import SMALL
     from repro.core import (EpisodePipeline, HybridConfig,
-                            HybridEmbeddingTrainer, build_episode_blocks)
+                            HybridEmbeddingTrainer)
     from repro.core import eval as ev
     from repro.graph.csr import build_csr
     from repro.graph.generators import powerlaw_graph
-    from repro.train.checkpoint import save_checkpoint
-    from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+    from repro.walk import (DiskSampleStore, MemorySampleStore, WalkConfig,
+                            WalkEngine)
 
     if args.graph:
         from repro.graph.io import load_edge_list
         g_full = load_edge_list(args.graph)
+    elif args.graph_kind == "sbm":
+        from repro.graph.generators import sbm_graph
+        # candidate-pair budget must scale with n or large graphs come out
+        # mostly degree-0 (expected edges ~ rounds * batch * 0.0075)
+        g_full = sbm_graph(args.nodes, rounds=max(30, args.nodes // 40),
+                           seed=args.seed)
     else:
         g_full = powerlaw_graph(args.nodes, 5, seed=args.seed)
     train_e, test_e = ev.split_edges(g_full, 0.03, seed=args.seed)
@@ -53,17 +59,43 @@ def train_embedding(args):
     cfg_kw = {}
     if args.dtype is not None:          # None -> HybridConfig default (bf16)
         cfg_kw["dtype"] = args.dtype
-    cfg = HybridConfig(dim=args.dim, minibatch=SMALL.minibatch,
-                       negatives=SMALL.negatives, subparts=args.subparts,
-                       neg_pool=SMALL.neg_pool, lr=args.lr, seed=args.seed,
+    cfg = HybridConfig(dim=args.dim,
+                       minibatch=args.minibatch or SMALL.minibatch,
+                       negatives=args.negatives or SMALL.negatives,
+                       subparts=args.subparts,
+                       neg_pool=args.neg_pool or SMALL.neg_pool,
+                       lr=args.lr, seed=args.seed,
                        impl=args.impl, block_b=args.block_b, **cfg_kw)
     trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
                                      degrees=g.degrees())
     trainer.init_embeddings()
-    store = MemorySampleStore()
+    # bounded store: the walker can run at most store_depth episodes ahead of
+    # the pipeline's drops, so peak sample memory is O(depth · episode)
+    store_depth = args.store_depth or args.pipeline_depth + 1
+    if args.store == "disk":
+        # fresh: this run produces NEW walks — stale episode files or .done
+        # markers from a previous run in the same dir would race it. With
+        # --keep-samples the files are the artifact the user asked to keep,
+        # so never delete them — warn instead if any are present.
+        sample_dir = args.store_dir or os.path.join(args.out_dir, "samples")
+        if args.keep_samples and os.path.isdir(sample_dir) and any(
+                f.startswith("epoch") and f.endswith((".npy", ".done"))
+                for f in os.listdir(sample_dir)):
+            print(f"WARNING: {sample_dir} already holds episode files from a "
+                  f"previous run; this run's epochs will overwrite same-"
+                  f"numbered files and may race stale .done markers — use a "
+                  f"fresh --store-dir to keep both artifacts")
+        store = DiskSampleStore(sample_dir, depth=store_depth,
+                                keep=args.keep_samples,
+                                fresh=not args.keep_samples)
+    else:
+        store = MemorySampleStore(depth=store_depth)
     wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes,
-                      seed=args.seed)
-    pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch)
+                      seed=args.seed, workers=args.walk_workers)
+    pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch,
+                           block_cap=args.block_cap,
+                           depth=args.pipeline_depth,
+                           stage_fn=trainer.stage_blocks, drop_consumed=True)
     os.makedirs(args.out_dir, exist_ok=True)
 
     engine = WalkEngine(g, wcfg, store)
@@ -72,7 +104,7 @@ def train_embedding(args):
         _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store,
                                 pipe, test_e, neg_e)
     finally:
-        # always drain the prefetch worker: an in-flight build racing
+        # always drain the prefetch workers: an in-flight build racing
         # interpreter teardown (e.g. after a KeyboardInterrupt) can crash
         # inside numpy after module unload
         pipe.close()
@@ -84,20 +116,37 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
     from repro.train.checkpoint import save_checkpoint
     from repro.walk import WalkEngine
 
+    auc = 0.0
     for epoch in range(args.epochs):
+        # streamed: do NOT join — training starts as soon as episode 0 lands
+        # in the bounded store; the walker streams the rest concurrently
+        t0 = time.perf_counter()
+        nxt = None
+        losses = []
+        try:
+            for ep in range(args.episodes):
+                pipe.prefetch_window(epoch, ep, args.episodes)
+                eb = pipe.get(epoch, ep)
+                losses.append(trainer.train_episode(
+                    eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+                # paper: walks for e+1 overlap training e — launch them the
+                # moment this epoch's walker finishes (backpressure-paced)
+                if nxt is None and epoch + 1 < args.epochs and engine.finished():
+                    engine.join()        # surfaces walker errors
+                    nxt = WalkEngine(g, wcfg, store)
+                    nxt.start_async(epoch + 1)
+        except Exception:
+            # a dead walker finishes the epoch with episodes missing, which
+            # surfaces here as a KeyError — join to re-raise its real error.
+            # abandon() first: with nobody left to drain the bounded store, a
+            # HEALTHY walker could be blocked in put() and join would hang
+            store.abandon()
+            engine.join()
+            raise
         engine.join()
-        if epoch + 1 < args.epochs:  # paper: walks for e+1 overlap training e
+        if nxt is None and epoch + 1 < args.epochs:
             nxt = WalkEngine(g, wcfg, store)
             nxt.start_async(epoch + 1)
-        t0 = time.perf_counter()
-        pipe.prefetch(epoch, 0)
-        losses = []
-        for ep in range(args.episodes):
-            eb = pipe.get(epoch, ep)
-            if ep + 1 < args.episodes:
-                pipe.prefetch(epoch, ep + 1)
-            losses.append(trainer.train_episode(
-                eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
         store.drop_epoch(epoch)
         V = trainer.embeddings()
         Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
@@ -114,6 +163,9 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
                                    "context": trainer.context_embeddings()},
                             step=epoch + 1)
             print(f"  checkpoint -> {path}")
+    if args.min_auc is not None and auc < args.min_auc:
+        raise SystemExit(
+            f"final AUC {auc:.4f} below --min-auc {args.min_auc}")
 
 
 def train_lm(args):
@@ -172,11 +224,22 @@ def main():
     ap.add_argument("--lr", type=float, default=None)
     # embedding mode
     ap.add_argument("--graph", default=None, help="edge-list file (.npy/.txt)")
+    ap.add_argument("--graph-kind", default="powerlaw",
+                    choices=["powerlaw", "sbm"],
+                    help="synthetic graph when no --graph file: powerlaw "
+                         "(paper's social-network topology) or sbm (planted "
+                         "communities — use when gating on --min-auc)")
     ap.add_argument("--nodes", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=96)
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--episodes", type=int, default=4)
     ap.add_argument("--subparts", type=int, default=4)
+    ap.add_argument("--minibatch", type=int, default=None,
+                    help="shared-negative group rows (default: SMALL config)")
+    ap.add_argument("--negatives", type=int, default=None,
+                    help="shared negatives per minibatch (default: SMALL)")
+    ap.add_argument("--neg-pool", type=int, default=None,
+                    help="per-device negative pool size (default: SMALL)")
     # literal copy of kernels.ops.STEP_IMPLS: importing ops here would pull
     # jax into --help / arg-error paths (this module defers jax on purpose);
     # a stale copy fails loudly anyway (ops validates impl at trace time)
@@ -193,6 +256,34 @@ def main():
                     help="pin the fused-kernel tile size (default: "
                          "VMEM-aware autotune in kernels.ops)")
     ap.add_argument("--ckpt-every", type=int, default=5)
+    # streaming dataflow knobs
+    ap.add_argument("--walk-workers", type=int, default=2,
+                    help="walk-engine chunk worker threads (1 = inline; the "
+                         "sample stream is identical for any value)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="episodes in flight through the fetch/build/stage "
+                         "pipeline")
+    ap.add_argument("--store", default="memory", choices=["memory", "disk"],
+                    help="sample store backend (disk = the paper's "
+                         "offline/slow-cluster mode: episode .npy files)")
+    ap.add_argument("--store-dir", default=None,
+                    help="disk-store directory (default: OUT_DIR/samples)")
+    ap.add_argument("--store-depth", type=int, default=None,
+                    help="bounded-store capacity in undrained episodes "
+                         "(default: pipeline depth + 1)")
+    ap.add_argument("--keep-samples", action="store_true",
+                    help="disk store: keep episode files after consumption "
+                         "(the offline artifact) instead of deleting them")
+    ap.add_argument("--min-auc", type=float, default=None,
+                    help="exit non-zero if the final epoch's link-prediction "
+                         "AUC is below this (CI sanity gate)")
+    ap.add_argument("--block-cap", type=int, default=None,
+                    help="pin every episode's per-cell block capacity (rounds "
+                         "up to the minibatch pad): episodes then share one "
+                         "compiled step instead of re-lowering per bmax — "
+                         "set it above the expected max cell count or "
+                         "overflow samples are dropped (default: per-episode "
+                         "bmax, recompiles when it changes)")
     # lm mode
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=200)

@@ -3,19 +3,31 @@
 The paper decouples random-walk network augmentation from embedding training:
 the walk engine runs on CPUs (Plato/KnightKing in the paper), writes episode-
 partitioned walk/sample files, and the GPU training engine consumes them —
-either offline (slow clusters) or pipelined one epoch ahead (fast clusters).
+either offline (slow clusters) or pipelined (fast clusters).
 
 This module is the CPU component. It produces walks (vectorized numpy
 DeepWalk / node2vec-style) and hands them to a :class:`SampleStore` partitioned
 by episode, applying the degree-guided partitioning of GraphVite [4]: walk
 start nodes are ordered so that high-degree nodes spread uniformly across
 episode partitions, balancing per-episode work.
+
+Streaming dataflow: each episode's start nodes are split into fixed-size
+chunks, each chunk seeded independently by (seed, epoch, episode, chunk).
+A worker pool (``WalkConfig.workers``) generates chunks concurrently; the
+coordinator assembles them IN CHUNK ORDER and ``put``s each episode into the
+store as soon as it completes, so episode e's training overlaps episode
+e+1's walks. Because the chunk decomposition and per-chunk RNG streams are
+fixed by the config — never by the worker count — the sample stream is
+bitwise identical for any ``workers`` setting, including the synchronous
+``workers=1`` path.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import queue as _queue
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -33,14 +45,26 @@ class WalkConfig:
     node2vec_q: float = 1.0        # in-out parameter
     episodes: int = 8              # partitions per epoch
     seed: int = 0
+    # streaming knobs. `workers` sizes the chunk worker pool (1 = run chunks
+    # inline on the coordinator). `chunk_size` fixes the canonical per-episode
+    # chunk decomposition — it changes the RNG stream, `workers` never does.
+    # `lookahead` bounds run-ahead: chunk futures are in flight for at most
+    # this many episodes beyond the one currently being assembled, so engine-
+    # side buffering stays O(lookahead · episode) even when the store's
+    # backpressure stalls `put`.
+    workers: int = 1
+    chunk_size: int = 4096
+    lookahead: int = 2
 
 
 class WalkEngine:
     """Produces augmented edge samples, episode-partitioned.
 
-    ``run_epoch`` is synchronous; ``start_async``/``join`` run the engine on a
-    background thread so training of epoch *e* overlaps walk generation of
-    epoch *e+1* — the paper's pipelined decoupling.
+    ``run_epoch`` streams episodes into the store as they complete (chunks
+    sharded over ``config.workers`` threads); ``start_async``/``join`` run the
+    whole engine on a background thread so training overlaps walk generation
+    — the paper's pipelined decoupling. Worker errors propagate through the
+    ``_errors`` queue and re-raise in ``join``.
     """
 
     def __init__(self, graph: CSRGraph, config: WalkConfig, store: SampleStore):
@@ -49,6 +73,11 @@ class WalkEngine:
         self.store = store
         self._thread: threading.Thread | None = None
         self._errors: _queue.Queue = _queue.Queue()
+        # per-episode walk BUSY seconds (sum of per-chunk processing time,
+        # measured inside the worker) for the bench's per-stage accounting —
+        # busy time, not wall: concurrent chunks would otherwise double-count
+        self.episode_walk_s: dict[tuple[int, int], float] = {}
+        self._walk_s_mu = threading.Lock()
 
     # ------------------------------------------------------------------ walks
     def _step(self, cur: np.ndarray, prev: np.ndarray | None,
@@ -116,14 +145,77 @@ class WalkEngine:
             rng.shuffle(p)
         return parts
 
-    def run_epoch(self, epoch: int) -> None:
-        """Generate walks + augmentation pairs for every episode of one epoch."""
+    def _chunk_pairs(self, epoch: int, episode: int, chunk: int,
+                     starts: np.ndarray) -> np.ndarray:
+        """Walks + augmentation for one start-node chunk. The RNG stream is
+        keyed by (seed, epoch, episode, chunk) — independent of which worker
+        runs it and of the worker count."""
+        t0 = time.perf_counter()
         cfg = self.config
-        for ep, starts in enumerate(self._episode_starts(epoch)):
-            rng = np.random.default_rng(cfg.seed + 7919 * epoch + ep)
-            walks = self.generate_walks(starts, rng)
-            pairs = walks_to_pairs(walks, cfg.window)
-            self.store.put(epoch, ep, pairs)
+        rng = np.random.default_rng(
+            [cfg.seed & 0x7FFFFFFF, epoch, episode, chunk])
+        walks = self.generate_walks(starts, rng)
+        pairs = walks_to_pairs(walks, cfg.window)
+        dt = time.perf_counter() - t0
+        with self._walk_s_mu:
+            key = (epoch, episode)
+            self.episode_walk_s[key] = self.episode_walk_s.get(key, 0.0) + dt
+        return pairs
+
+    def _episode_chunks(self, starts: np.ndarray) -> list[np.ndarray]:
+        c = max(1, self.config.chunk_size)
+        return [starts[lo: lo + c] for lo in range(0, max(starts.size, 1), c)]
+
+    def _assemble(self, chunks: list[np.ndarray]) -> np.ndarray:
+        if not chunks:
+            return np.zeros((0, 2), dtype=np.int32)
+        if len(chunks) == 1:
+            return chunks[0]
+        return np.concatenate(chunks, axis=0)
+
+    def run_epoch(self, epoch: int) -> None:
+        """Stream every episode of one epoch into the store as it completes.
+
+        Chunks run on a ``config.workers``-thread pool (inline when 1);
+        episodes are assembled and ``put`` in episode order, so a bounded
+        store's backpressure paces the coordinator while workers keep
+        generating up to ``lookahead`` episodes ahead.
+        """
+        cfg = self.config
+        parts = self._episode_starts(epoch)
+        if cfg.workers <= 1:
+            for ep, starts in enumerate(parts):
+                pairs = self._assemble(
+                    [self._chunk_pairs(epoch, ep, c, s)
+                     for c, s in enumerate(self._episode_chunks(starts))])
+                self.store.put(epoch, ep, pairs)
+            self.store.finish_epoch(epoch)
+            return
+
+        pool = ThreadPoolExecutor(max_workers=cfg.workers,
+                                  thread_name_prefix="walk")
+        futs: dict[int, list] = {}
+
+        def submit(ep: int) -> None:
+            futs[ep] = [pool.submit(self._chunk_pairs, epoch, ep, c, s)
+                        for c, s in enumerate(self._episode_chunks(parts[ep]))]
+
+        try:
+            hi = min(len(parts), 1 + max(0, cfg.lookahead))
+            for ep in range(hi):
+                submit(ep)
+            for ep in range(len(parts)):
+                pairs = self._assemble([f.result() for f in futs.pop(ep)])
+                if hi < len(parts):
+                    submit(hi)
+                    hi += 1
+                # may block on store backpressure — workers keep running the
+                # already-submitted lookahead chunks meanwhile
+                self.store.put(epoch, ep, pairs)
+        except BaseException:
+            pool.shutdown(wait=False, cancel_futures=True)
+            raise
+        pool.shutdown(wait=True)
         self.store.finish_epoch(epoch)
 
     # ------------------------------------------------------------ async mode
@@ -138,6 +230,10 @@ class WalkEngine:
                 self.store.finish_epoch(epoch)
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
+
+    def finished(self) -> bool:
+        """True once the async epoch (if any) has fully completed."""
+        return self._thread is None or not self._thread.is_alive()
 
     def join(self) -> None:
         if self._thread is not None:

@@ -4,16 +4,28 @@ The two engines are decoupled: the walk engine `put`s episode-partitioned
 sample arrays, the trainer `get`s them. Two backends mirror the paper's two
 cluster modes (§IV-A): in-memory (fast clusters, samples stay resident) and
 disk (slow clusters: offline files partitioned by episode, memory-mapped).
+
+Both backends implement a bounded-capacity contract: constructed with
+``depth=N``, ``put`` applies backpressure (blocks the walker) while more than
+N undrained episodes are resident, and ``drop`` releases a consumed episode.
+With the streaming dataflow (walk engine puts episodes as they complete, the
+episode pipeline drops them once built into blocks) peak sample memory is
+O(depth · episode), not O(epoch).
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
 
 import numpy as np
 
 
 class SampleStore:
+    #: bounded-capacity knob: None = unbounded (seed behaviour); N = ``put``
+    #: blocks while N undrained episodes are resident.
+    depth: int | None = None
+
     def put(self, epoch: int, episode: int, pairs: np.ndarray) -> None:
         raise NotImplementedError
 
@@ -26,18 +38,47 @@ class SampleStore:
     def episodes(self, epoch: int) -> int:
         raise NotImplementedError
 
+    # ------------------------------------------------------------- draining
+    def drop(self, epoch: int, episode: int) -> None:
+        """Release one consumed episode (frees a backpressure slot)."""
+
+    def drop_epoch(self, epoch: int) -> None:
+        """Release every episode of an epoch plus its bookkeeping."""
+
+    def abandon(self) -> None:
+        """Terminal: the consumer died. Subsequent ``put``s are discarded
+        without blocking, so a walker mid-epoch can run to completion (and
+        ``finish_epoch``) instead of deadlocking on backpressure."""
+
 
 class MemorySampleStore(SampleStore):
-    """Thread-safe in-memory store; trainer blocks until the walker delivers."""
+    """Thread-safe in-memory store; trainer blocks until the walker delivers.
 
-    def __init__(self):
+    ``depth=N`` bounds resident (put-but-not-dropped) episodes: the walker's
+    ``put`` blocks until the trainer ``drop``s. ``peak_resident`` records the
+    high-water mark so tests can assert the bound actually held.
+    """
+
+    def __init__(self, depth: int | None = None):
+        self.depth = depth
         self._data: dict[tuple[int, int], np.ndarray] = {}
+        self._dropped: set[tuple[int, int]] = set()
         self._done: set[int] = set()
+        self._counts: dict[int, int] = {}
         self._cv = threading.Condition()
+        self._abandoned = False
+        self.peak_resident = 0
 
     def put(self, epoch, episode, pairs):
         with self._cv:
+            if self.depth is not None:
+                while len(self._data) >= self.depth and not self._abandoned:
+                    self._cv.wait(timeout=60.0)
+            if self._abandoned:
+                return
             self._data[(epoch, episode)] = pairs
+            self._counts[epoch] = self._counts.get(epoch, 0) + 1
+            self.peak_resident = max(self.peak_resident, len(self._data))
             self._cv.notify_all()
 
     def finish_epoch(self, epoch):
@@ -48,6 +89,8 @@ class MemorySampleStore(SampleStore):
     def get(self, epoch, episode, *, block=True):
         with self._cv:
             while (epoch, episode) not in self._data:
+                if (epoch, episode) in self._dropped:
+                    raise KeyError((epoch, episode))  # consumed and released
                 if not block or (epoch in self._done):
                     raise KeyError((epoch, episode))
                 self._cv.wait(timeout=60.0)
@@ -57,40 +100,145 @@ class MemorySampleStore(SampleStore):
         with self._cv:
             while epoch not in self._done:
                 self._cv.wait(timeout=60.0)
-            return len([k for k in self._data if k[0] == epoch])
+            return self._counts.get(epoch, 0)
+
+    def drop(self, epoch, episode):
+        with self._cv:
+            if self._data.pop((epoch, episode), None) is not None:
+                self._dropped.add((epoch, episode))
+                self._cv.notify_all()
 
     def drop_epoch(self, epoch: int) -> None:
         with self._cv:
             for k in [k for k in self._data if k[0] == epoch]:
                 del self._data[k]
+            self._dropped = {k for k in self._dropped if k[0] != epoch}
             self._done.discard(epoch)
+            self._counts.pop(epoch, None)
+            self._cv.notify_all()
+
+    def abandon(self) -> None:
+        with self._cv:
+            self._abandoned = True
+            self._data.clear()
+            self._cv.notify_all()
 
 
 class DiskSampleStore(SampleStore):
-    """Episode-partitioned .npy files, loaded with mmap (paper's SSD mode)."""
+    """Episode-partitioned .npy files, loaded with mmap (paper's SSD mode).
 
-    def __init__(self, root: str):
+    ``get(block=True)`` polls for the episode file until it appears or the
+    epoch's ``.done`` marker rules it out — the walker may still be writing
+    (files are published atomically via rename). ``depth``/``drop`` give the
+    same bounded contract as the memory store; ``keep=True`` (default)
+    preserves the files on drop — they are the offline-mode artifact — while
+    ``keep=False`` deletes them, bounding disk use for transient runs.
+    ``fresh=True`` clears stale episode files and ``.done`` markers from a
+    previous run at construction — REQUIRED when a walker reuses a directory,
+    or consumers race the old run's markers / silently read its samples.
+    """
+
+    def __init__(self, root: str, *, depth: int | None = None,
+                 keep: bool = True, poll_s: float = 0.005,
+                 fresh: bool = False):
         self.root = root
+        self.depth = depth
+        self.keep = keep
+        self.poll_s = poll_s
         os.makedirs(root, exist_ok=True)
+        if fresh:
+            for f in os.listdir(root):
+                if (f.startswith("epoch")
+                        and (f.endswith(".npy") or f.endswith(".done"))):
+                    os.remove(os.path.join(root, f))
+        self._cv = threading.Condition()
+        self._resident: set[tuple[int, int]] = set()   # put-but-not-dropped
+        self._dropped: set[tuple[int, int]] = set()
+        self._produced: dict[int, int] = {}            # puts per epoch
+        self._abandoned = False
+        self.peak_resident = 0
 
     def _path(self, epoch, episode):
         return os.path.join(self.root, f"epoch{epoch:04d}_ep{episode:04d}.npy")
 
+    def _done_path(self, epoch):
+        return os.path.join(self.root, f"epoch{epoch:04d}.done")
+
     def put(self, epoch, episode, pairs):
+        with self._cv:
+            if self.depth is not None:
+                while (len(self._resident) >= self.depth
+                       and not self._abandoned):
+                    self._cv.wait(timeout=60.0)
+            if self._abandoned:
+                return
+            self._resident.add((epoch, episode))
+            self._produced[epoch] = self._produced.get(epoch, 0) + 1
+            self.peak_resident = max(self.peak_resident, len(self._resident))
         tmp = self._path(epoch, episode) + ".tmp.npy"
         np.save(tmp, pairs)
         os.replace(tmp, self._path(epoch, episode))
 
     def finish_epoch(self, epoch):
-        with open(os.path.join(self.root, f"epoch{epoch:04d}.done"), "w") as f:
+        with open(self._done_path(epoch), "w") as f:
             f.write("done")
 
     def get(self, epoch, episode, *, block=True):
         path = self._path(epoch, episode)
-        if not os.path.exists(path):
-            raise KeyError((epoch, episode))
+        while not os.path.exists(path):
+            if (epoch, episode) in self._dropped:
+                raise KeyError((epoch, episode))
+            if not block or os.path.exists(self._done_path(epoch)):
+                # the walker publishes the file BEFORE .done: re-check once so
+                # a racing finish_epoch can't hide a file that just landed
+                if os.path.exists(path):
+                    break
+                raise KeyError((epoch, episode))
+            time.sleep(self.poll_s)
         return np.load(path, mmap_mode="r")
 
     def episodes(self, epoch):
+        # like the memory store: wait for the walker to declare the epoch
+        # complete, then report how many episodes were produced
+        while not os.path.exists(self._done_path(epoch)):
+            time.sleep(self.poll_s)
+        with self._cv:
+            if epoch in self._produced:      # we are the producing process
+                return self._produced[epoch]
+            # offline consumer: count files, adding back only episodes WE
+            # dropped whose file is actually gone (keep=False)
+            pre = f"epoch{epoch:04d}_ep"
+            n = len([f for f in os.listdir(self.root)
+                     if f.startswith(pre) and f.endswith(".npy")
+                     and not f.endswith(".tmp.npy")])
+            return n + len([k for k in self._dropped if k[0] == epoch
+                            and not os.path.exists(self._path(*k))])
+
+    def drop(self, epoch, episode):
+        path = self._path(epoch, episode)
+        with self._cv:
+            if (epoch, episode) in self._dropped or not os.path.exists(path):
+                return
+            self._dropped.add((epoch, episode))
+            if not self.keep:
+                os.remove(path)
+            self._resident.discard((epoch, episode))
+            self._cv.notify_all()
+
+    def drop_epoch(self, epoch: int) -> None:
         pre = f"epoch{epoch:04d}_ep"
-        return len([f for f in os.listdir(self.root) if f.startswith(pre) and f.endswith(".npy")])
+        with self._cv:
+            if not self.keep:
+                for f in os.listdir(self.root):
+                    if f.startswith(pre) and f.endswith(".npy"):
+                        os.remove(os.path.join(self.root, f))
+            self._dropped = {k for k in self._dropped if k[0] != epoch}
+            self._resident = {k for k in self._resident if k[0] != epoch}
+            self._produced.pop(epoch, None)
+            self._cv.notify_all()
+
+    def abandon(self) -> None:
+        with self._cv:
+            self._abandoned = True
+            self._resident.clear()
+            self._cv.notify_all()

@@ -66,6 +66,40 @@ def test_episode_blocks_place_every_pair_exactly_once(n_nodes, n_pairs,
     np.testing.assert_array_equal(key(recovered), key(pairs))
 
 
+def test_chunked_build_bitwise_parity():
+    """The two-pass streaming builder must be bitwise identical to a
+    single-pass build for any chunk size (a pair's slot is its occurrence
+    index within its cell in pair order)."""
+    rng = np.random.default_rng(5)
+    pairs = rng.integers(0, 300, size=(4000, 2)).astype(np.int32)
+    part = NodePartition(300, dims=(2, 2), subparts=2)
+    ref = build_episode_blocks(pairs, part, pad_multiple=8, chunk=10**9)
+    for chunk in (1, 7, 129, 4000):
+        got = build_episode_blocks(pairs, part, pad_multiple=8, chunk=chunk)
+        np.testing.assert_array_equal(got.blocks, ref.blocks)
+        np.testing.assert_array_equal(got.counts, ref.counts)
+        assert got.dropped == ref.dropped == 0
+    # with a cap that actually drops, the drop set must also be identical
+    capped_ref = build_episode_blocks(pairs, part, block_cap=16,
+                                      pad_multiple=8, chunk=10**9)
+    capped = build_episode_blocks(pairs, part, block_cap=16,
+                                  pad_multiple=8, chunk=61)
+    np.testing.assert_array_equal(capped.blocks, capped_ref.blocks)
+    assert capped.dropped == capped_ref.dropped > 0
+
+
+def test_block_cap_pins_block_shape():
+    """block_cap fixes the Bmax dimension even when every cell is emptier,
+    so a streaming consumer compiles the episode step once."""
+    rng = np.random.default_rng(1)
+    pairs = rng.integers(0, 100, size=(40, 2)).astype(np.int32)
+    part = NodePartition(100, dims=(1, 1), subparts=1)
+    eb = build_episode_blocks(pairs, part, block_cap=512, pad_multiple=64)
+    assert eb.blocks.shape[-2] == 512
+    assert eb.dropped == 0
+    assert int(eb.counts.sum()) == 40
+
+
 def test_block_cap_drops_overflow():
     rng = np.random.default_rng(0)
     pairs = np.zeros((500, 2), np.int32)  # all in one cell

@@ -128,6 +128,84 @@ def test_episode_pipeline_prefetch(lp_setup):
     pipe.close()
 
 
+def test_multistage_pipeline_staged_training(lp_setup):
+    """Full streaming dataflow: multi-worker walks -> bounded store ->
+    fetch/build/stage pipeline -> staged train. The store's resident bound
+    must hold and the staged path must train identically to handing
+    train_episode raw EpisodeBlocks."""
+    from repro.core import StagedEpisodeBlocks
+
+    g, _, _ = lp_setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = HybridConfig(dim=32, minibatch=64, negatives=4, subparts=2,
+                       neg_pool=512)
+    out = []
+    for staged_mode in (True, False):
+        tr = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                    degrees=g.degrees())
+        tr.init_embeddings()
+        store = MemorySampleStore(depth=2)
+        eng = WalkEngine(g, WalkConfig(walk_length=6, window=3, episodes=3,
+                                       workers=2, chunk_size=256), store)
+        eng.start_async(0)
+        pipe = EpisodePipeline(
+            store, tr.part, pad_multiple=cfg.minibatch, depth=2,
+            stage_fn=tr.stage_blocks if staged_mode else None,
+            drop_consumed=True)
+        try:
+            for ep in range(3):
+                pipe.prefetch_window(0, ep, 3)
+                eb = pipe.get(0, ep)
+                assert isinstance(eb, StagedEpisodeBlocks) == staged_mode
+                loss = tr.train_episode(eb)
+                assert np.isfinite(loss)
+                times = pipe.pop_times(0, ep)
+                assert set(times) >= ({"walk_wait_s", "build_s", "stage_s"}
+                                      if staged_mode
+                                      else {"walk_wait_s", "build_s"})
+            eng.join()
+        finally:
+            pipe.close()
+        assert store.peak_resident <= 2
+        out.append(tr.embeddings())
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+def test_streamed_blocks_bitwise_match_synchronous(lp_setup):
+    """End-to-end parity gate: the streamed multi-worker dataflow must
+    produce bitwise-identical episode blocks to the synchronous path for a
+    fixed seed — walk sharding must not change the sample stream."""
+    from repro.core.partition import NodePartition
+
+    g, _, _ = lp_setup
+    part = NodePartition(g.num_nodes, dims=(1, 2), subparts=2)
+    wkw = dict(walk_length=8, window=4, episodes=3, seed=21, chunk_size=200)
+
+    # synchronous reference: serial walker, direct builds
+    store = MemorySampleStore()
+    WalkEngine(g, WalkConfig(workers=1, **wkw), store).run_epoch(0)
+    ref = [build_episode_blocks(np.asarray(store.get(0, ep)), part,
+                                pad_multiple=32) for ep in range(3)]
+
+    # streamed: 3 walk workers, bounded store, multi-stage pipeline
+    store = MemorySampleStore(depth=2)
+    eng = WalkEngine(g, WalkConfig(workers=3, **wkw), store)
+    eng.start_async(0)
+    pipe = EpisodePipeline(store, part, pad_multiple=32, depth=2,
+                           drop_consumed=True)
+    try:
+        for ep in range(3):
+            pipe.prefetch_window(0, ep, 3)
+            got = pipe.get(0, ep)
+            np.testing.assert_array_equal(got.blocks, ref[ep].blocks)
+            np.testing.assert_array_equal(got.counts, ref[ep].counts)
+            assert got.dropped == ref[ep].dropped
+        eng.join()
+    finally:
+        pipe.close()
+    assert store.peak_resident <= 2
+
+
 class _EpisodeKeyedStore:
     """Fake sample store whose pairs encode (epoch, episode), so a stale
     prefetch is detectable in the built blocks."""

@@ -85,6 +85,217 @@ def test_disk_store_roundtrip(tmp_path):
     assert store.episodes(0) == 1
 
 
+def test_disk_store_get_blocks_for_inflight_episode(tmp_path):
+    """Regression: get(block=True) used to raise KeyError immediately while
+    the walker was still writing; it must poll until the file (or the epoch
+    .done marker) appears. episodes() likewise waits on .done."""
+    import threading
+    import time
+
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.array([[7, 8], [9, 10]], np.int32)
+
+    with pytest.raises(KeyError):
+        store.get(0, 0, block=False)     # non-blocking stays immediate
+
+    def writer():
+        time.sleep(0.15)
+        store.put(0, 0, pairs)
+        store.finish_epoch(0)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    got = store.get(0, 0)                # must wait for the writer
+    np.testing.assert_array_equal(np.asarray(got), pairs)
+    assert store.episodes(0) == 1        # waited on .done
+    t.join()
+    # epoch is done and episode 1 never arrived -> immediate KeyError
+    with pytest.raises(KeyError):
+        store.get(0, 1)
+
+
+@pytest.mark.parametrize("make_store", [
+    lambda tmp: MemorySampleStore(depth=2),
+    lambda tmp: DiskSampleStore(str(tmp), depth=2, keep=False),
+])
+def test_bounded_store_backpressure(tmp_path, make_store):
+    """put blocks while `depth` undrained episodes are resident; drop frees
+    a slot; peak_resident proves the bound held."""
+    g = powerlaw_graph(300, 4, seed=3)
+    store = make_store(tmp_path)
+    eng = WalkEngine(g, WalkConfig(walk_length=6, window=2, episodes=5,
+                                   workers=2, chunk_size=64), store)
+    eng.start_async(0)
+    sizes = []
+    for ep in range(5):
+        sizes.append(np.asarray(store.get(0, ep)).shape[0])
+        store.drop(0, ep)
+    eng.join()
+    assert min(sizes) > 0
+    assert store.peak_resident <= 2
+    # dropped episodes are gone for good, not silently regenerated
+    with pytest.raises(KeyError):
+        store.get(0, 0)
+
+
+def test_streamed_multiworker_bitwise_parity():
+    """Walk sharding must not change the sample stream: any worker count
+    yields bitwise-identical per-episode pairs for a fixed seed."""
+    g = powerlaw_graph(400, 4, seed=7)
+    streams = {}
+    for workers in (1, 3):
+        store = MemorySampleStore()
+        cfg = WalkConfig(walk_length=7, window=3, episodes=3, seed=11,
+                         workers=workers, chunk_size=100)
+        WalkEngine(g, cfg, store).run_epoch(0)
+        streams[workers] = [np.asarray(store.get(0, e)) for e in range(3)]
+    for e in range(3):
+        np.testing.assert_array_equal(streams[1][e], streams[3][e])
+
+
+def test_abandoned_store_unblocks_walker(tmp_path):
+    """If the consumer dies, abandon() must let a walker blocked on
+    backpressure run to completion instead of deadlocking join()."""
+    import threading
+
+    for store in (MemorySampleStore(depth=1),
+                  DiskSampleStore(str(tmp_path), depth=1, keep=False)):
+        g = powerlaw_graph(200, 3, seed=0)
+        eng = WalkEngine(g, WalkConfig(walk_length=4, window=2, episodes=4,
+                                       workers=2, chunk_size=64), store)
+        eng.start_async(0)
+        # wait until the walker has filled the single slot and is blocked
+        store.get(0, 0)
+        t = threading.Timer(0.1, store.abandon)
+        t.start()
+        eng.join()                 # must return (and not raise) promptly
+        t.join()
+        assert store.peak_resident <= 1
+
+
+def test_disk_store_fresh_clears_stale_run(tmp_path):
+    import os
+
+    old = DiskSampleStore(str(tmp_path))
+    old.put(0, 0, np.array([[1, 2]], np.int32))
+    old.finish_epoch(0)
+    store = DiskSampleStore(str(tmp_path), fresh=True)
+    # stale files and the .done marker are gone: a non-blocking get sees an
+    # empty epoch instead of the previous run's samples
+    with pytest.raises(KeyError):
+        store.get(0, 0, block=False)
+    assert not any(f.endswith((".npy", ".done"))
+                   for f in os.listdir(str(tmp_path)))
+
+
+def test_disk_store_episodes_counts_once_with_keep(tmp_path):
+    """Regression: episodes() must not double-count a dropped episode whose
+    file was kept (keep=True)."""
+    store = DiskSampleStore(str(tmp_path), keep=True)
+    store.put(0, 0, np.array([[1, 2]], np.int32))
+    store.put(0, 1, np.array([[3, 4]], np.int32))
+    store.finish_epoch(0)
+    store.drop(0, 0)               # file stays on disk
+    assert store.episodes(0) == 2
+    # offline-consumer view (separate store object, no produce bookkeeping)
+    reader = DiskSampleStore(str(tmp_path))
+    assert reader.episodes(0) == 2
+    reader_del = DiskSampleStore(str(tmp_path), keep=False)
+    reader_del.drop(0, 0)          # file deleted, still counts as produced
+    assert reader_del.episodes(0) == 2
+
+
+def test_worker_error_propagates_through_join():
+    g = powerlaw_graph(100, 3, seed=1)
+    store = MemorySampleStore()
+    eng = WalkEngine(g, WalkConfig(episodes=2, workers=2), store)
+
+    def boom(*a, **k):
+        raise RuntimeError("chunk worker died")
+
+    eng._chunk_pairs = boom
+    eng.start_async(0)
+    with pytest.raises(KeyError):
+        store.get(0, 0)       # woken by the error path's finish_epoch
+    with pytest.raises(RuntimeError, match="chunk worker died"):
+        eng.join()
+
+
+# ---------------------------------------------------------------------------
+# property-test helpers (shared by the hypothesis tests below and the
+# deterministic spot-checks, so the invariant logic is exercised even on the
+# no-hypothesis container where @given tests skip)
+# ---------------------------------------------------------------------------
+def _check_episode_starts_balance(g, episodes, walks_per_node, seed):
+    cfg = WalkConfig(episodes=episodes, walks_per_node=walks_per_node,
+                     seed=seed)
+    eng = WalkEngine(g, cfg, MemorySampleStore())
+    parts = eng._episode_starts(0)
+    assert len(parts) == episodes
+    # union of episodes == every node, walks_per_node times
+    allstarts = np.sort(np.concatenate(parts))
+    want = np.sort(np.repeat(np.arange(g.num_nodes, dtype=np.int32),
+                             walks_per_node))
+    np.testing.assert_array_equal(allstarts, want)
+    # degree-guided deal: per-episode degree mass within one round's spread
+    # (sorted round-robin ⇒ episode mass gaps telescope to ≤ ~max degree)
+    deg = g.degrees().astype(np.int64)
+    masses = np.array([deg[p].sum() for p in parts], dtype=np.float64)
+    tol = 2.0 * deg.max() * walks_per_node + 1
+    assert masses.max() - masses.min() <= tol, (masses, tol)
+
+
+def _check_pairs_match_bruteforce(walks, window):
+    pairs = walks_to_pairs(walks, window)
+    brute = []
+    W, L1 = walks.shape
+    for w in walks:
+        for t in range(L1):
+            for d in range(1, window + 1):
+                if t + d < L1 and w[t] != w[t + d]:
+                    brute.append((w[t], w[t + d]))
+    got = sorted(map(tuple, pairs.tolist()))
+    assert got == sorted(brute)
+
+
+def test_episode_starts_balance_spotcheck():
+    _check_episode_starts_balance(powerlaw_graph(700, 4, seed=2), 4, 2, 5)
+
+
+def test_pairs_bruteforce_spotcheck():
+    rng = np.random.default_rng(3)
+    walks = rng.integers(0, 50, size=(20, 6)).astype(np.int32)
+    _check_pairs_match_bruteforce(walks, 3)
+    _check_pairs_match_bruteforce(walks[:, :2], 5)   # window > walk length
+
+
+@settings(max_examples=15, deadline=None)
+@given(nodes=st.integers(50, 500), episodes=st.integers(1, 8),
+       walks_per_node=st.integers(1, 3), seed=st.integers(0, 10))
+def test_episode_starts_degree_balance_property(nodes, episodes,
+                                                walks_per_node, seed):
+    """Degree-guided partitioning: every start appears exactly
+    walks_per_node times and per-episode degree mass is balanced."""
+    g = powerlaw_graph(nodes, 4, seed=seed)
+    _check_episode_starts_balance(g, episodes, walks_per_node, seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(walk_len=st.integers(1, 12), window=st.integers(1, 8),
+       n_walks=st.integers(1, 30), seed=st.integers(0, 10))
+def test_walks_to_pairs_window_property(walk_len, window, n_walks, seed):
+    """walks_to_pairs == brute-force window enumeration (minus self-pairs)
+    on ragged walk lengths, including walks shorter than the window."""
+    rng = np.random.default_rng(seed)
+    walks = rng.integers(0, 40, size=(n_walks, walk_len + 1)).astype(np.int32)
+    # simulate dead-end stalls: some walks freeze at a random position
+    stall_from = rng.integers(1, walk_len + 1, size=n_walks)
+    for i in range(n_walks):
+        if rng.random() < 0.3:
+            walks[i, stall_from[i]:] = walks[i, stall_from[i] - 1]
+    _check_pairs_match_bruteforce(walks, window)
+
+
 def test_node2vec_biased_step_runs():
     g = mesh_graph(12)
     cfg = WalkConfig(walk_length=6, window=2, node2vec_p=0.5, node2vec_q=2.0)
