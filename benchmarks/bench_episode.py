@@ -40,6 +40,7 @@ from common import append_run                                # noqa: E402
 from repro.core import (EpisodePipeline, HybridConfig,          # noqa: E402
                         HybridEmbeddingTrainer, build_episode_blocks)
 from repro.graph.generators import powerlaw_graph            # noqa: E402
+from repro.runtime import FaultPlan, clear_plan, install_plan  # noqa: E402
 from repro.walk import MemorySampleStore, WalkConfig, WalkEngine  # noqa: E402
 
 IMPLS = ("ref", "pallas", "pallas_fused2")
@@ -103,12 +104,17 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
                    dtype: str, seed: int = 0):
     """End-to-end epoch through the full dataflow, sync vs streamed.
 
-    sync     — serial walks (workers=1), then per episode: build, stage,
-               train, all on the consumer thread (the pre-PR-5 path).
-    streamed — multi-worker walk engine putting episodes as they complete
-               into a bounded store, consumed through the multi-stage
-               EpisodePipeline (walk-wait -> build -> device staging) while
-               the trainer runs.
+    sync        — serial walks (workers=1), then per episode: build, stage,
+                  train, all on the consumer thread (the pre-PR-5 path).
+    streamed    — multi-worker walk engine putting episodes as they complete
+                  into a bounded store, consumed through the multi-stage
+                  EpisodePipeline (walk-wait -> build -> device staging)
+                  while the trainer runs.
+    faults_idle — the streamed path again (same warm-start structure, later
+                  epochs) with an inert FaultPlan installed: every
+                  walk.chunk / store.put fault point runs the full matcher
+                  but no spec ever fires. Gates the idle overhead of the
+                  fault-injection layer against the streamed row.
 
     Both modes time epoch 2 (identical sample stream — the chunk
     decomposition and RNG keying are worker-count-invariant) with the same
@@ -229,7 +235,6 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
     eng2.join()
     walk_s = sum(t for (e, _), t in eng2.episode_walk_s.items() if e == 2)
     store.drop_epoch(2)
-    pipe.close()
     rows.append({
         "mode": "streamed", "impl": impl, "B": B, "d": d,
         "mesh": list(mesh_shape), "episodes": episodes,
@@ -240,6 +245,68 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
         "samples_per_s": n_samples / wall_s,
         "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
         "peak_resident_episodes": store.peak_resident,
+    })
+
+    # ---- faults_idle: the streamed epoch again (epochs 3 warm, 4 timed —
+    # same warm-start structure as above) with an inert plan installed. The
+    # `at` ordinals are unreachable, so every walk.chunk / store.put
+    # fault_point takes the full locked matcher path and nothing fires —
+    # this row is the idle cost of the fault layer the runtime docs promise
+    # is free.
+    plan = FaultPlan(["walk.chunk:crash:at=1000000000",
+                      "store.put:crash:at=1000000000"])
+    install_plan(plan)
+    try:
+        eng3 = WalkEngine(g, wcfg(walk_workers), store)
+        eng3.start_async(3)
+        eng4 = None
+        for ep in range(episodes):              # warm epoch (untimed)
+            pipe.prefetch_window(3, ep, episodes)
+            trainer.train_episode(pipe.get(3, ep))
+            if eng4 is None and eng3.finished():
+                eng3.join()
+                eng4 = WalkEngine(g, wcfg(walk_workers), store)
+                eng4.start_async(4)
+        eng3.join()
+        if eng4 is None:
+            eng4 = WalkEngine(g, wcfg(walk_workers), store)
+            eng4.start_async(4)
+        store.drop_epoch(3)
+
+        t0 = time.perf_counter()
+        walk_wait_s = build_s = stage_s = train_s = 0.0
+        n_samples = dropped = 0
+        for ep in range(episodes):              # timed epoch, plan live
+            pipe.prefetch_window(4, ep, episodes)
+            staged = pipe.get(4, ep)
+            times = pipe.pop_times(4, ep)
+            t = time.perf_counter()
+            trainer.train_episode(staged)
+            train_s += time.perf_counter() - t
+            walk_wait_s += times.get("walk_wait_s", 0.0)
+            build_s += times.get("build_s", 0.0)
+            stage_s += times.get("stage_s", 0.0)
+            n_samples += staged.num_samples
+            dropped += staged.dropped
+        wall_s = time.perf_counter() - t0
+        eng4.join()
+        walk_s = sum(t for (e, _), t in eng4.episode_walk_s.items() if e == 4)
+        store.drop_epoch(4)
+    finally:
+        clear_plan()
+    pipe.close()
+    rows.append({
+        "mode": "faults_idle", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": walk_workers, "pipeline_depth": depth,
+        "walk_s": walk_s, "walk_wait_s": walk_wait_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": store.peak_resident,
+        "fault_points_checked": (plan.count("walk.chunk")
+                                 + plan.count("store.put")),
     })
     return rows
 
@@ -330,6 +397,13 @@ def main():
                 print(f"WARNING: streamed slower than sync at "
                       f"B={B} d={d}: {by_mode['streamed']:.1f} < "
                       f"{by_mode['sync']:.1f}")
+            # the robustness PR's perf gate: an installed-but-idle fault
+            # plan must cost nothing visible against walk noise
+            if by_mode.get("faults_idle", 0) < 0.9 * by_mode.get("streamed", 0):
+                print(f"WARNING: idle fault layer costs >10% streamed "
+                      f"throughput at B={B} d={d}: "
+                      f"{by_mode['faults_idle']:.1f} < "
+                      f"{by_mode['streamed']:.1f}")
 
     run = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

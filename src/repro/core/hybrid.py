@@ -292,6 +292,21 @@ class HybridEmbeddingTrainer:
             self.vert, self.ctx, eb.blocks, eb.counts, pool, seed, lr_arr)
         return float(loss)
 
+    def set_embeddings(self, vert: np.ndarray, ctx: np.ndarray) -> None:
+        """Install externally-provided (num_nodes, d) tables — the resume
+        path. Pads to the partition geometry (padded rows never enter
+        training math, so zero-padding restored tables is exact) and
+        device_puts with the episode-step shardings."""
+        part = self.part
+        dt = np.dtype(self.cfg.dtype)
+        _, sh = self._episode_fn()
+        self.vert = jax.device_put(
+            part.pad_table(np.asarray(vert).astype(dt, copy=False)),
+            sh["table"])
+        self.ctx = jax.device_put(
+            part.pad_table(np.asarray(ctx).astype(dt, copy=False)),
+            sh["table"])
+
     def embeddings(self) -> np.ndarray:
         return self.part.unpad_table(np.asarray(self.vert))
 

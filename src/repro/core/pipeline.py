@@ -27,6 +27,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.core.partition import NodePartition, build_episode_blocks
+from repro.runtime import CorruptEpisodeError
 
 
 class EpisodePipeline:
@@ -46,13 +47,22 @@ class EpisodePipeline:
         has bucketed the pairs — with a bounded store this is what frees the
         walker's backpressure slots.
     workers_per_stage : worker threads per stage pool.
+    rewalk : optional ``(epoch, episode) -> pairs`` regenerator (e.g.
+        ``WalkEngine.episode_pairs``). When the store raises
+        ``CorruptEpisodeError`` — a torn or bit-flipped episode file — the
+        fetch stage re-walks the episode (bitwise-identical by RNG keying)
+        instead of failing the run, and repairs the file via the store's
+        ``rewrite`` if it has one.
     """
 
     def __init__(self, store, part: NodePartition, *, pad_multiple: int,
                  block_cap: int | None = None, depth: int = 2,
                  stage_fn=None, drop_consumed: bool = False,
-                 build_chunk: int | None = None, workers_per_stage: int = 1):
+                 build_chunk: int | None = None, workers_per_stage: int = 1,
+                 rewalk=None):
         self.store = store
+        self.rewalk = rewalk
+        self.recovered: list[tuple[int, int]] = []  # corrupt episodes re-walked
         self.part = part
         self.pad_multiple = pad_multiple
         self.block_cap = block_cap
@@ -74,9 +84,24 @@ class EpisodePipeline:
             self._times.setdefault(key, {})[stage] = seconds
 
     # ------------------------------------------------------------- stages
+    def _get_pairs(self, epoch: int, episode: int):
+        """store.get with corrupt-episode recovery (when ``rewalk`` is set):
+        regenerate the pairs deterministically and repair the stored file."""
+        try:
+            return self.store.get(epoch, episode)
+        except CorruptEpisodeError:
+            if self.rewalk is None:
+                raise
+            pairs = self.rewalk(epoch, episode)
+            rewrite = getattr(self.store, "rewrite", None)
+            if callable(rewrite):
+                rewrite(epoch, episode, pairs)
+            self.recovered.append((epoch, episode))
+            return pairs
+
     def _fetch(self, key):
         t0 = time.perf_counter()
-        pairs = self.store.get(*key)
+        pairs = self._get_pairs(*key)
         self._record(key, "walk_wait_s", time.perf_counter() - t0)
         return pairs
 
@@ -99,7 +124,7 @@ class EpisodePipeline:
         return staged
 
     def _build_sync(self, epoch: int, episode: int):
-        pairs = self.store.get(epoch, episode)
+        pairs = self._get_pairs(epoch, episode)
         eb = build_episode_blocks(
             np.asarray(pairs), self.part, block_cap=self.block_cap,
             pad_multiple=self.pad_multiple, chunk=self.build_chunk)

@@ -15,7 +15,8 @@ from repro.embed_serve.quant import (DEFAULT_OVERFETCH, dequantize_rows,
                                      overfetch_m, quantize_rows,
                                      rescore_exact,
                                      topk_mips_quant_rescored)
-from repro.embed_serve.store import ShardedEmbeddingStore, recall_at_k
+from repro.embed_serve.store import (ShardedEmbeddingStore, TopKMeta,
+                                     recall_at_k)
 from repro.embed_serve.topk import (choose_block_n, merge_topk, select_topk,
                                     topk_mips, topk_mips_quant,
                                     topk_mips_quant_xla, topk_mips_rowwise,
@@ -25,7 +26,7 @@ __all__ = [
     "BatcherStats", "DEFAULT_OVERFETCH", "MicroBatcher",
     "ShardedEmbeddingStore", "choose_block_n", "dequantize_rows",
     "drive_open_loop", "merge_topk", "overfetch_m", "quantize_rows",
-    "recall_at_k", "rescore_exact", "select_topk", "topk_mips",
+    "TopKMeta", "recall_at_k", "rescore_exact", "select_topk", "topk_mips",
     "topk_mips_quant", "topk_mips_quant_rescored", "topk_mips_quant_xla",
     "topk_mips_rowwise", "topk_mips_xla", "topk_scan_vmem_bytes",
 ]

@@ -14,6 +14,16 @@ memory. Exceptions from the backend propagate to every future of the
 failed batch; ``close()`` serves everything already queued before the
 worker exits (mirroring ``EpisodePipeline.close``'s drain-don't-drop
 teardown).
+
+Overload control (``repro.runtime``): ``deadline_ms`` stamps every request
+at admission and expires it with ``DeadlineExceeded`` — instead of serving
+it — once the stamp passes (a request never hangs past its deadline: it is
+either served, expired, or shed). ``shed_on_full=True`` turns the full-
+queue block into an immediate ``Overloaded`` raise, the admission-control
+mode for latency-sensitive serving. When the backend returns a third
+element (``ShardedEmbeddingStore.topk(return_meta=True)``'s ``TopKMeta``),
+it is attached to every request of the batch, so callers see degraded
+responses tagged as such.
 """
 from __future__ import annotations
 
@@ -25,16 +35,22 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.runtime import DeadlineExceeded, Overloaded
+
 _CLOSE = object()
 
 
 @dataclasses.dataclass
 class BatcherStats:
-    """Coalescing counters (updated by the worker thread only)."""
+    """Coalescing + overload counters. ``shed`` is bumped by submitter
+    threads (under the batcher's stats lock); the rest by the worker."""
 
     requests: int = 0
     batches: int = 0
     padded_rows: int = 0
+    shed: int = 0         # rejected at admission (queue full, shed_on_full)
+    expired: int = 0      # deadline passed before the batch ran
+    degraded: int = 0     # requests answered from a degraded (partial) scan
 
     @property
     def mean_batch(self) -> float:
@@ -52,21 +68,31 @@ class MicroBatcher:
 
     def __init__(self, serve_fn, dim: int, *, max_batch: int = 256,
                  window_ms: float = 2.0, pad_multiple: int = 8,
-                 queue_cap: int = 4096, fixed_batch: bool = False):
+                 queue_cap: int = 4096, fixed_batch: bool = False,
+                 deadline_ms: float | None = None,
+                 shed_on_full: bool = False):
         """fixed_batch=True pads every backend call to max_batch rows, so a
         jitted (shape-specialized) backend compiles exactly one batch shape
         instead of one per first-seen multiple of pad_multiple — the right
-        mode for compiled serving (warm up with one max_batch call)."""
+        mode for compiled serving (warm up with one max_batch call).
+        deadline_ms gives every request a per-request deadline from the
+        moment of admission: a request still queued when it expires fails
+        with DeadlineExceeded instead of being served late. shed_on_full
+        makes a full queue raise Overloaded at submit instead of blocking
+        (admission control instead of backpressure)."""
         assert max_batch >= 1 and pad_multiple >= 1 and queue_cap >= 1
         self._serve_fn = serve_fn
         self._dim = dim
         self._max_batch = max_batch
         self._window_s = window_ms / 1e3
         self._pad = max_batch if fixed_batch else pad_multiple
+        self._deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+        self._shed_on_full = shed_on_full
         self._queue = queue.Queue(maxsize=queue_cap)
         self._closed = False
         self._drained = False       # close() finished its cancel-drain
         self.stats = BatcherStats()
+        self._stats_mu = threading.Lock()   # guards the shed counter
         self._thread = threading.Thread(target=self._worker,
                                         name="embed-serve-batcher",
                                         daemon=True)
@@ -74,14 +100,27 @@ class MicroBatcher:
 
     # ---------------------------------------------------------------- API
     def submit(self, query) -> Future:
-        """Enqueue one (d,) query; blocks when the queue is full."""
+        """Enqueue one (d,) query; blocks when the queue is full (or, with
+        ``shed_on_full``, raises Overloaded instead of blocking)."""
         q = np.asarray(query, dtype=np.float32)
         if q.shape != (self._dim,):
             raise ValueError(f"query shape {q.shape} != ({self._dim},)")
         if self._closed:
             raise RuntimeError("MicroBatcher is closed")
         fut = Future()
-        self._queue.put((q, fut))
+        dl = (None if self._deadline_s is None
+              else time.perf_counter() + self._deadline_s)
+        if self._shed_on_full:
+            try:
+                self._queue.put_nowait((q, fut, dl))
+            except queue.Full:
+                with self._stats_mu:
+                    self.stats.shed += 1
+                raise Overloaded(
+                    f"queue full ({self._queue.maxsize}); request shed"
+                ) from None
+        else:
+            self._queue.put((q, fut, dl))
         # a close() racing the check above either drains this item (worker
         # backlog or close's cancel loop) or already finished draining —
         # `_drained` was set before that final drain, so seeing it here
@@ -166,8 +205,20 @@ class MicroBatcher:
             self._run(batch)
 
     def _run(self, batch):
-        live = [(q, fut) for q, fut in batch
-                if fut.set_running_or_notify_cancel()]
+        # expire first: a request whose deadline passed while queued gets
+        # DeadlineExceeded, never a late answer
+        now = time.perf_counter()
+        live = []
+        for q, fut, dl in batch:
+            if dl is not None and now > dl:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(DeadlineExceeded(
+                        f"request expired {now - dl:.3f}s past its "
+                        f"deadline before serving"))
+                    self.stats.expired += 1
+                continue
+            if fut.set_running_or_notify_cancel():
+                live.append((q, fut))
         if not live:
             return
         qs = np.stack([q for q, _ in live])
@@ -177,16 +228,23 @@ class MicroBatcher:
             qs = np.concatenate(
                 [qs, np.zeros((Bp - B, self._dim), qs.dtype)])
         try:
-            vals, ids = self._serve_fn(qs)
+            out = self._serve_fn(qs)
         except Exception as e:          # noqa: BLE001 — propagate to callers
             for _, fut in live:
                 fut.set_exception(e)
             return
+        # backend returns (vals, ids) or (vals, ids, meta) — a degraded-scan
+        # tag (TopKMeta) is attached to every request of the batch
+        meta = out[2] if len(out) == 3 else None
+        vals, ids = out[0], out[1]
         for i, (_, fut) in enumerate(live):
-            fut.set_result((np.asarray(vals[i]), np.asarray(ids[i])))
+            row = (np.asarray(vals[i]), np.asarray(ids[i]))
+            fut.set_result(row if meta is None else row + (meta,))
         self.stats.requests += B
         self.stats.batches += 1
         self.stats.padded_rows += Bp - B
+        if meta is not None and getattr(meta, "degraded", False):
+            self.stats.degraded += len(live)
 
 
 def drive_open_loop(batcher: MicroBatcher, queries, *, qps: float = 0.0,

@@ -18,8 +18,20 @@ kernel serves cosine retrieval.
 shard (``embed_serve.quant``), enabling the two-tier scan
 (``impl="quant"``): int8 first pass at 4x less scan traffic, exact rescore
 of the over-fetched survivors, same cross-shard merge.
+
+Degraded mode: ``topk(shard_timeout_s=...)`` runs each shard's scan as its
+own task; shards that miss the deadline are excluded from the merge and the
+response is tagged degraded (``return_meta=True`` → :class:`TopKMeta` with
+the failed shard list), so one slow or dead device degrades recall over its
+rows instead of stalling every query — the answer over surviving shards is
+still exact (``oracle_topk(exclude_shards=...)`` is the test oracle).
 """
 from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import wait as _fut_wait
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,7 @@ from repro.core.partition import NodePartition
 from repro.embed_serve import quant as qz
 from repro.embed_serve import topk as tk
 from repro.kernels import ref as kref
+from repro.runtime import fault_point
 from repro.train.checkpoint import load_arrays
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -37,6 +50,17 @@ QUERY_IMPLS = ("auto", "pallas", "rowwise", "xla",
                "quant", "quant_pallas", "quant_xla")
 QUANT_TIERS = (None, "int8")
 
+_UNSET = object()   # "use the store's shard_timeout_s" vs an explicit None
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKMeta:
+    """Per-query-batch serving outcome (``topk(return_meta=True)``)."""
+
+    degraded: bool = False
+    failed_shards: tuple = ()
+    timeout_s: float | None = None
+
 
 class ShardedEmbeddingStore:
     """Row-sharded embedding table + exact top-k retrieval over it."""
@@ -44,7 +68,8 @@ class ShardedEmbeddingStore:
     def __init__(self, shards, part: NodePartition, valid, devices, *,
                  host_table, block_n: int, step: int = -1,
                  qshards=None, quant=None,
-                 overfetch: float = qz.DEFAULT_OVERFETCH):
+                 overfetch: float = qz.DEFAULT_OVERFETCH,
+                 shard_timeout_s: float | None = None):
         self.shards = shards                  # per-device (rows_p, d) arrays
         self.part = part
         self.valid = tuple(valid)             # real rows per shard
@@ -55,6 +80,9 @@ class ShardedEmbeddingStore:
         self.qshards = qshards                # per-device (int8, scales) or
         self.quant = quant                    # None (no quantized tier)
         self.overfetch = overfetch            # default tier-one margin
+        self.shard_timeout_s = shard_timeout_s  # None = never degrade
+        self._pool = None                     # lazy shard-scan executor
+        self._pool_mu = threading.Lock()
 
     # ------------------------------------------------------------- loading
     @classmethod
@@ -62,6 +90,7 @@ class ShardedEmbeddingStore:
                    block_n: int | None = None, normalize: bool = False,
                    keep_host_table: bool = True, quant: str | None = None,
                    overfetch: float = qz.DEFAULT_OVERFETCH,
+                   shard_timeout_s: float | None = None,
                    step: int = -1) -> "ShardedEmbeddingStore":
         """Shard an in-memory (num_nodes, d) table across `devices`.
 
@@ -79,6 +108,10 @@ class ShardedEmbeddingStore:
         (``quant.quantize_rows`` of the served — post-normalize — rows,
         same row order and padding as the exact shards); `overfetch` is
         the default tier-one margin ``topk(impl="quant")`` uses.
+        shard_timeout_s is the default per-shard scan deadline for
+        degraded-mode queries (None = wait forever). `devices` may repeat
+        a device (e.g. ``[cpu]*4``) to get a multi-shard layout on fewer
+        physical devices — how the degraded-serving tests and CI leg run.
         """
         devices = list(devices) if devices is not None else jax.devices()
         if quant not in QUANT_TIERS:
@@ -115,7 +148,7 @@ class ShardedEmbeddingStore:
                    host_table=table if keep_host_table else None,
                    block_n=bn, step=step,
                    qshards=qshards if quant else None, quant=quant,
-                   overfetch=overfetch)
+                   overfetch=overfetch, shard_timeout_s=shard_timeout_s)
 
     @classmethod
     def load(cls, path: str, *, table: str = "vertex",
@@ -137,8 +170,64 @@ class ShardedEmbeddingStore:
     def dim(self) -> int:
         return self.shards[0].shape[1]
 
+    def _dispatch_shard(self, s: int, q, k: int, impl: str, ov: float):
+        """Dispatch shard s's scan (async) → (scores, GLOBAL ids) device
+        arrays. Sub-k shards keep the IDX_SENTINEL so they lose the merge."""
+        shard = self.shards[s]
+        if impl == "pallas":
+            v, i = tk.topk_mips(shard, q, k=k, valid=self.valid[s],
+                                block_n=self.block_n,
+                                interpret=not _ON_TPU)
+        elif impl == "rowwise":
+            v, i = tk.topk_mips_rowwise(shard, q, k=k,
+                                        valid=self.valid[s],
+                                        interpret=not _ON_TPU)
+        elif impl.startswith("quant"):
+            q8, sc = self.qshards[s]
+            v, i = qz.topk_mips_quant_rescored(
+                shard, q8, sc, q, k=k, overfetch=ov,
+                valid=self.valid[s], block_n=self.block_n,
+                impl="pallas" if impl == "quant_pallas" else "xla",
+                interpret=not _ON_TPU)
+        else:
+            v, i = tk.topk_mips_xla(shard, q, k=k, valid=self.valid[s])
+        # shard-local → global node ids on the shard's own device
+        # (elementwise, overlaps the other shards' scans)
+        rows = self.part.padded_rows_per_shard
+        gi = jnp.where(i == tk.IDX_SENTINEL, tk.IDX_SENTINEL, i + s * rows)
+        return v, gi
+
+    def _merge(self, per_v, per_i, k: int):
+        if len(per_v) == 1:
+            return per_v[0], per_i[0]
+        gv, gi = tk.merge_topk(jnp.asarray(np.stack(per_v)),
+                               jnp.asarray(np.stack(per_i)), k=k)
+        return np.asarray(gv), np.asarray(gi)
+
+    def _resolve_impl(self, impl: str) -> str:
+        if impl not in QUERY_IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; one of {QUERY_IMPLS}")
+        if impl == "auto":
+            impl = "pallas" if _ON_TPU else "xla"
+        elif impl == "quant":
+            impl = "quant_pallas" if _ON_TPU else "quant_xla"
+        if impl.startswith("quant") and self.qshards is None:
+            raise RuntimeError("store has no quantized tier; build it with "
+                               "quant='int8'")
+        return impl
+
+    def _scan_pool(self) -> ThreadPoolExecutor:
+        with self._pool_mu:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=max(1, len(self.shards)),
+                    thread_name_prefix="shard-scan")
+            return self._pool
+
     def topk(self, queries, k: int, *, impl: str = "auto",
-             overfetch: float | None = None):
+             overfetch: float | None = None,
+             shard_timeout_s=_UNSET,
+             return_meta: bool = False):
         """Exact MIPS top-k over all shards.
 
         queries: (Q, d). Returns ((Q, k) f32 scores, (Q, k) i32 global node
@@ -149,66 +238,86 @@ class ShardedEmbeddingStore:
         requires ``quant="int8"`` at load; kernel path on TPU, jnp path
         elsewhere, or force with "quant_pallas"/"quant_xla"). `overfetch`
         overrides the store's default tier-one margin for quant impls.
+
+        shard_timeout_s (unset: the store's ``shard_timeout_s``; an
+        explicit None = wait forever, e.g. for compile warmup) runs each
+        shard's scan as its own task and merges
+        only the shards that answered in time — exact over the survivors,
+        degraded over the failed shards' rows. All shards failing raises.
+        return_meta=True appends a :class:`TopKMeta` (degraded flag +
+        failed shard list) to the return tuple.
         """
-        if impl not in QUERY_IMPLS:
-            raise ValueError(f"unknown impl {impl!r}; one of {QUERY_IMPLS}")
-        if impl == "auto":
-            impl = "pallas" if _ON_TPU else "xla"
-        elif impl == "quant":
-            impl = "quant_pallas" if _ON_TPU else "quant_xla"
-        if impl.startswith("quant") and self.qshards is None:
-            raise RuntimeError("store has no quantized tier; build it with "
-                               "quant='int8'")
+        impl = self._resolve_impl(impl)
         ov = self.overfetch if overfetch is None else overfetch
         k = min(k, self.num_nodes)
         q = jnp.asarray(np.asarray(queries, dtype=np.float32))
-        rows = self.part.padded_rows_per_shard
-        # dispatch every shard before syncing any: jax dispatch is async, so
-        # P devices scan concurrently instead of one behind the other
-        launched = []
-        for s, shard in enumerate(self.shards):
-            if self.valid[s] == 0:      # num_nodes < s * rows: nothing here
-                continue
-            if impl == "pallas":
-                v, i = tk.topk_mips(shard, q, k=k, valid=self.valid[s],
-                                    block_n=self.block_n,
-                                    interpret=not _ON_TPU)
-            elif impl == "rowwise":
-                v, i = tk.topk_mips_rowwise(shard, q, k=k,
-                                            valid=self.valid[s],
-                                            interpret=not _ON_TPU)
-            elif impl.startswith("quant"):
-                q8, sc = self.qshards[s]
-                v, i = qz.topk_mips_quant_rescored(
-                    shard, q8, sc, q, k=k, overfetch=ov,
-                    valid=self.valid[s], block_n=self.block_n,
-                    impl="pallas" if impl == "quant_pallas" else "xla",
-                    interpret=not _ON_TPU)
-            else:
-                v, i = tk.topk_mips_xla(shard, q, k=k, valid=self.valid[s])
-            # shard-local → global node ids on the shard's own device
-            # (elementwise, overlaps the other shards' scans), preserving
-            # the sentinel of any sub-k shard so it keeps losing the merge
-            gi = jnp.where(i == tk.IDX_SENTINEL, tk.IDX_SENTINEL,
-                           i + s * rows)
-            launched.append((v, gi))
-        # one host sync for all shards, after everything is dispatched
-        staged = jax.device_get(launched)
-        per_v = [v for v, _ in staged]
-        per_i = [i for _, i in staged]
-        if len(per_v) == 1:
-            return per_v[0], per_i[0]
-        gv, gi = tk.merge_topk(jnp.asarray(np.stack(per_v)),
-                               jnp.asarray(np.stack(per_i)), k=k)
-        return np.asarray(gv), np.asarray(gi)
+        timeout = (self.shard_timeout_s if shard_timeout_s is _UNSET
+                   else shard_timeout_s)
+        live = [s for s in range(len(self.shards)) if self.valid[s] > 0]
 
-    def oracle_topk(self, queries, k: int):
-        """Numpy ground truth over the full (unsharded) table."""
+        if timeout is None:
+            # fast path (unchanged from the always-healthy store): dispatch
+            # every shard before syncing any — jax dispatch is async, so P
+            # devices scan concurrently instead of one behind the other
+            launched = [self._dispatch_shard(s, q, k, impl, ov)
+                        for s in live]
+            staged = jax.device_get(launched)
+            gv, gi = self._merge([v for v, _ in staged],
+                                 [i for _, i in staged], k)
+            return (gv, gi, TopKMeta()) if return_meta else (gv, gi)
+
+        def scan(s):
+            fault_point("serve.shard", (s,))
+            return jax.device_get(self._dispatch_shard(s, q, k, impl, ov))
+
+        pool = self._scan_pool()
+        futs = {s: pool.submit(scan, s) for s in live}
+        # wait for ALL to complete (a crashed shard completes immediately
+        # with its exception; healthy shards keep their full deadline)
+        _fut_wait(list(futs.values()), timeout=timeout)
+        per_v, per_i, failed = [], [], []
+        for s, f in futs.items():
+            if f.done() and f.exception() is None:
+                v, i = f.result()
+                per_v.append(v)
+                per_i.append(i)
+            else:
+                # timed out (result, if it ever lands, is discarded) or
+                # crashed — either way the shard is out of this answer
+                failed.append(s)
+        if not per_v:
+            raise RuntimeError(
+                f"all {len(live)} shard scans failed or timed out "
+                f"({timeout}s); shards: {failed}")
+        gv, gi = self._merge(per_v, per_i, k)
+        if return_meta:
+            return gv, gi, TopKMeta(degraded=bool(failed),
+                                    failed_shards=tuple(sorted(failed)),
+                                    timeout_s=timeout)
+        return gv, gi
+
+    def oracle_topk(self, queries, k: int, *, exclude_shards=()):
+        """Numpy ground truth over the full (unsharded) table.
+
+        ``exclude_shards`` drops those shards' rows first — the surviving-
+        shards oracle a degraded response must match exactly. The id remap
+        is monotone, so the kernel's smaller-index tie rule is preserved."""
         if self.host_table is None:
             raise RuntimeError("store was built with keep_host_table=False; "
                                "the oracle needs the host copy")
-        return kref.topk_mips_ref(self.host_table, queries,
-                                  min(k, self.num_nodes))
+        if not exclude_shards:
+            return kref.topk_mips_ref(self.host_table, queries,
+                                      min(k, self.num_nodes))
+        rows = self.part.padded_rows_per_shard
+        keep = np.ones(self.num_nodes, dtype=bool)
+        for s in exclude_shards:
+            keep[s * rows: min((s + 1) * rows, self.num_nodes)] = False
+        idx = np.nonzero(keep)[0]
+        if idx.size == 0:
+            raise ValueError("exclude_shards leaves no rows to rank")
+        v, i = kref.topk_mips_ref(self.host_table[idx], queries,
+                                  min(k, idx.size))
+        return v, idx[np.asarray(i)].astype(np.asarray(i).dtype)
 
     def score_ids(self, queries, ids) -> np.ndarray:
         """Ground-truth numpy f32 scores of specific (Q, k) candidate ids.

@@ -18,6 +18,14 @@ that is the CI smoke: trained checkpoint → serve → recall@k == oracle.
 ``--quant int8`` builds the int8 tier at load and (with ``--impl auto``)
 serves through the two-tier scan — the same gate then certifies that the
 ``--overfetch`` margin loses nothing vs the exact oracle.
+
+Degraded mode: ``--shards N`` forces an N-shard layout (repeating devices
+when there are fewer), ``--shard-timeout-ms`` bounds each shard's scan, and
+``--inject "serve.shard:delay:key=1:..."`` makes a shard miss it — the
+recall gate then scores against the SURVIVING-shards oracle (exactness of
+what was answerable, not of what was lost), ``--expect-degraded`` asserts
+the degradation actually happened, and ``--deadline-ms`` gives every
+request an admission deadline so nothing hangs past it.
 """
 from __future__ import annotations
 
@@ -65,10 +73,31 @@ def main(argv=None):
                     help="N(0, noise) perturbation of the sampled query rows")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-recall", type=float, default=None,
-                    help="exit 1 if recall@k vs the oracle is below this")
+                    help="exit 1 if recall@k vs the oracle is below this "
+                         "(the surviving-shards oracle when shards failed)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="force an N-shard layout, repeating devices when "
+                         "fewer exist (degraded-mode testing on one host)")
+    ap.add_argument("--shard-timeout-ms", type=float, default=None,
+                    help="per-shard scan deadline; shards that miss it are "
+                         "dropped from the merge and the response is tagged "
+                         "degraded (default: wait forever)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request admission deadline in the batcher; an "
+                         "expired request fails with DeadlineExceeded "
+                         "instead of being served late")
+    ap.add_argument("--inject", action="append", default=[], metavar="SPEC",
+                    help="deterministic fault spec, repeatable, e.g. "
+                         "serve.shard:delay:key=1:delay=1.0:times=inf "
+                         "(see repro.runtime.faults)")
+    ap.add_argument("--expect-degraded", action="store_true",
+                    help="exit 1 unless at least one response was actually "
+                         "degraded (guards the chaos leg against a fault "
+                         "plan that silently never fired)")
     args = ap.parse_args(argv)
 
     from repro.embed_serve import quant as qz
+    from repro.runtime import FaultPlan, clear_plan, install_plan
 
     quant = None if args.quant == "none" else args.quant
     impl = args.impl
@@ -80,15 +109,28 @@ def main(argv=None):
         # silently serving the exact path would let a recall-gate run
         # "validate" an overfetch margin that was never exercised
         ap.error("--overfetch requires --quant int8")
+    load_kw = {}
+    if args.shards is not None:
+        import jax
+        devs = jax.devices()
+        load_kw["devices"] = [devs[i % len(devs)] for i in range(args.shards)]
+    if args.shard_timeout_ms is not None:
+        load_kw["shard_timeout_s"] = args.shard_timeout_ms / 1e3
     store = ShardedEmbeddingStore.load(
         args.ckpt, table=args.table, normalize=args.metric == "cosine",
         quant=quant,
         overfetch=(qz.DEFAULT_OVERFETCH if args.overfetch is None
-                   else args.overfetch))
+                   else args.overfetch), **load_kw)
     tier = f", int8 tier (overfetch {store.overfetch:g})" if quant else ""
     print(f"loaded {args.table} table: {store.num_nodes} x {store.dim} "
           f"{store.host_table.dtype} over {len(store.shards)} shard(s) "
           f"(step {store.step}){tier}")
+
+    plan = None
+    if args.inject:
+        plan = FaultPlan(args.inject)
+        install_plan(plan)
+        print(f"fault plan: {args.inject}")
 
     rng = np.random.default_rng(args.seed)
     rows = rng.integers(0, store.num_nodes, size=args.queries)
@@ -98,21 +140,43 @@ def main(argv=None):
     if args.metric == "cosine":
         queries /= np.linalg.norm(queries, axis=1, keepdims=True) + 1e-12
 
+    degraded_meta = args.shard_timeout_ms is not None
+
     def serve_fn(q):
-        return store.topk(q, args.k, impl=impl)
+        # with a shard deadline, request the TopKMeta so the batcher can tag
+        # every response of a degraded batch
+        return store.topk(q, args.k, impl=impl, return_meta=degraded_meta)
 
     # fixed_batch: every backend call is padded to max_batch rows, so the
     # shape-specialized (jitted) path compiles exactly once — here, before
-    # the clock starts, not inside a request's latency
-    serve_fn(np.zeros((args.max_batch, store.dim), np.float32))
+    # the clock starts, not inside a request's latency. Warm up with the
+    # fault layer suppressed (a times-bounded spec must not be spent on it)
+    # and the shard deadline disabled (the compile takes longer than any
+    # sane timeout; a healthy store must not warm up degraded).
+    if plan is not None:
+        clear_plan()
+    store.topk(np.zeros((args.max_batch, store.dim), np.float32), args.k,
+               impl=impl, shard_timeout_s=None, return_meta=degraded_meta)
+    if plan is not None:
+        install_plan(plan)
     batcher = MicroBatcher(serve_fn, store.dim, max_batch=args.max_batch,
-                           window_ms=args.batch_window_ms, fixed_batch=True)
+                           window_ms=args.batch_window_ms, fixed_batch=True,
+                           deadline_ms=args.deadline_ms)
     results, lat, wall = drive_open_loop(batcher, queries, qps=args.qps,
                                          timeout=120)
     batcher.close()
+    if plan is not None:
+        clear_plan()
 
-    got_ids = np.stack([ids for _, ids in results])
-    oracle_vals, oracle_ids = store.oracle_topk(queries, args.k)
+    # results are (vals, ids) or (vals, ids, meta); union the failed shards
+    # so the gate scores against what was actually answerable
+    got_ids = np.stack([r[1] for r in results])
+    failed = sorted({s for r in results if len(r) == 3
+                     for s in r[2].failed_shards})
+    n_degraded = sum(1 for r in results
+                     if len(r) == 3 and r[2].degraded)
+    oracle_vals, oracle_ids = store.oracle_topk(queries, args.k,
+                                                exclude_shards=failed)
     # tie tolerance uses ground-truth rescoring of the returned ids, never
     # the kernel's own reported values
     recall = recall_at_k(got_ids, oracle_ids,
@@ -122,13 +186,21 @@ def main(argv=None):
     p50 = float(np.percentile(lat_ms, 50))
     p99 = float(np.percentile(lat_ms, 99))
     st = batcher.stats
+    deg = (f" | DEGRADED {n_degraded}/{args.queries} req "
+           f"(shards {failed} failed)" if failed else "")
     print(f"served {args.queries} requests in {wall:.3f}s "
           f"({args.queries / wall:.1f} QPS achieved, target "
           f"{args.qps or 'inf'}) | latency p50 {p50:.2f}ms p99 {p99:.2f}ms "
           f"| {st.batches} batches, mean {st.mean_batch:.1f} req/batch "
-          f"| recall@{args.k} {recall:.4f}")
+          f"| recall@{args.k} {recall:.4f}{deg}")
+    if args.expect_degraded and not n_degraded:
+        print("FAIL: --expect-degraded but every response was full-fidelity "
+              "(did the fault plan fire?)")
+        sys.exit(1)
     if args.check_recall is not None and recall < args.check_recall:
-        print(f"FAIL: recall {recall:.4f} < required {args.check_recall}")
+        which = f"surviving-shards ({failed} excluded)" if failed else "full"
+        print(f"FAIL: recall {recall:.4f} < required {args.check_recall} "
+              f"vs the {which} oracle")
         sys.exit(1)
 
 

@@ -15,6 +15,14 @@ Two modes, selected by --arch:
 
 Scale note: full (non-``--reduced``) LM configs need the real pod — on this
 container they are exercised via ``repro.launch.dryrun``.
+
+Fault tolerance (embedding mode): ``--ckpt-every N`` writes an atomic,
+checksummed resume checkpoint (tables + mid-epoch cursor) every N episodes;
+``--resume`` continues from it, bitwise-identical to an uninterrupted run.
+``--inject SPEC`` installs a deterministic fault plan (crash/delay/corrupt
+at named sites — see ``repro.runtime.faults``) for chaos testing;
+``--stall-timeout-s`` bounds how long any stage may block without store
+progress before failing with diagnostics instead of hanging.
 """
 from __future__ import annotations
 
@@ -34,6 +42,8 @@ def train_embedding(args):
     from repro.core import eval as ev
     from repro.graph.csr import build_csr
     from repro.graph.generators import powerlaw_graph
+    from repro.runtime import FaultPlan, clear_plan, install_plan
+    from repro.train.checkpoint import load_arrays
     from repro.walk import (DiskSampleStore, MemorySampleStore, WalkConfig,
                             WalkEngine)
 
@@ -68,10 +78,31 @@ def train_embedding(args):
                        impl=args.impl, block_b=args.block_b, **cfg_kw)
     trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
                                      degrees=g.degrees())
-    trainer.init_embeddings()
+
+    # crash-resume: restore tables + (epoch, episode) cursor from the last
+    # resume checkpoint; the remaining episodes replay bitwise-identically
+    # (per-episode RNG streams are keyed by the config, never by history)
+    start_epoch, start_episode = 0, 0
+    resume_path = os.path.join(args.out_dir, "resume.npz")
+    if args.resume:
+        data, _ = load_arrays(resume_path)   # verifies the crc manifest
+        start_epoch, start_episode = (int(v) for v in data["__cursor__"])
+        trainer.set_embeddings(data["vertex"], data["context"])
+        print(f"resume <- {resume_path} @ epoch {start_epoch} "
+              f"episode {start_episode}")
+        if start_epoch >= args.epochs:
+            print("resume cursor is past the final epoch; nothing to do")
+            return
+    else:
+        trainer.init_embeddings()
+
     # bounded store: the walker can run at most store_depth episodes ahead of
     # the pipeline's drops, so peak sample memory is O(depth · episode)
     store_depth = args.store_depth or args.pipeline_depth + 1
+    store_kw = {}
+    if args.stall_timeout_s is not None:
+        store_kw["stall_timeout_s"] = (args.stall_timeout_s
+                                       if args.stall_timeout_s > 0 else None)
     if args.store == "disk":
         # fresh: this run produces NEW walks — stale episode files or .done
         # markers from a previous run in the same dir would race it. With
@@ -87,44 +118,84 @@ def train_embedding(args):
                   f"fresh --store-dir to keep both artifacts")
         store = DiskSampleStore(sample_dir, depth=store_depth,
                                 keep=args.keep_samples,
-                                fresh=not args.keep_samples)
+                                fresh=not args.keep_samples, **store_kw)
     else:
-        store = MemorySampleStore(depth=store_depth)
+        store = MemorySampleStore(depth=store_depth, **store_kw)
     wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes,
                       seed=args.seed, workers=args.walk_workers)
+    # rewalk: a never-started engine whose episode_pairs regenerates any
+    # episode bitwise — the corrupt-episode-file recovery path
     pipe = EpisodePipeline(store, trainer.part, pad_multiple=cfg.minibatch,
                            block_cap=args.block_cap,
                            depth=args.pipeline_depth,
-                           stage_fn=trainer.stage_blocks, drop_consumed=True)
+                           stage_fn=trainer.stage_blocks, drop_consumed=True,
+                           rewalk=WalkEngine(g, wcfg, store).episode_pairs)
     os.makedirs(args.out_dir, exist_ok=True)
 
+    plan = None
+    if args.inject:
+        plan = FaultPlan(args.inject)
+        install_plan(plan)
+        print(f"fault plan: {args.inject}")
+
     engine = WalkEngine(g, wcfg, store)
-    engine.start_async(0)
+    engine.start_async(start_epoch)
     try:
         _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store,
-                                pipe, test_e, neg_e)
+                                pipe, test_e, neg_e,
+                                start_epoch=start_epoch,
+                                start_episode=start_episode)
     finally:
         # always drain the prefetch workers: an in-flight build racing
         # interpreter teardown (e.g. after a KeyboardInterrupt) can crash
         # inside numpy after module unload
         pipe.close()
+        if plan is not None:
+            clear_plan()
+
+
+def _write_resume(args, trainer, epoch, next_ep):
+    """Atomic resume checkpoint: tables + checksummed (epoch, episode)
+    cursor. ``next_ep`` is the NEXT episode to train; a full epoch
+    normalizes to (epoch+1, 0) so resume never re-enters a finished epoch."""
+    from repro.train.checkpoint import save_checkpoint
+
+    cur = (epoch + 1, 0) if next_ep >= args.episodes else (epoch, next_ep)
+    path = os.path.join(args.out_dir, "resume.npz")
+    save_checkpoint(path,
+                    {"vertex": trainer.embeddings(),
+                     "context": trainer.context_embeddings()},
+                    step=epoch * args.episodes + next_ep,
+                    extra={"__cursor__": np.asarray(cur, np.int64)})
+    return path
 
 
 def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
-                            test_e, neg_e):
+                            test_e, neg_e, *, start_epoch=0, start_episode=0):
     from repro.core import eval as ev
+    from repro.runtime import fault_point
     from repro.train.checkpoint import save_checkpoint
     from repro.walk import WalkEngine
 
     auc = 0.0
-    for epoch in range(args.epochs):
+    ckpt_every = max(0, args.ckpt_every)
+    for epoch in range(start_epoch, args.epochs):
         # streamed: do NOT join — training starts as soon as episode 0 lands
         # in the bounded store; the walker streams the rest concurrently
         t0 = time.perf_counter()
         nxt = None
         losses = []
+        # resuming mid-epoch: episodes before the cursor were already trained
+        # into the restored tables — drain them from the walker's stream
+        # without training so the bounded store keeps flowing
+        skip_until = start_episode if epoch == start_epoch else 0
         try:
             for ep in range(args.episodes):
+                fault_point("train.episode", (epoch, ep))
+                if ep < skip_until:
+                    store.get(epoch, ep)
+                    store.drop(epoch, ep)
+                    continue
                 pipe.prefetch_window(epoch, ep, args.episodes)
                 eb = pipe.get(epoch, ep)
                 losses.append(trainer.train_episode(
@@ -135,6 +206,10 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
                     engine.join()        # surfaces walker errors
                     nxt = WalkEngine(g, wcfg, store)
                     nxt.start_async(epoch + 1)
+                if ckpt_every and (epoch * args.episodes + ep + 1) % ckpt_every == 0:
+                    path = _write_resume(args, trainer, epoch, ep + 1)
+                    print(f"  resume checkpoint -> {path} "
+                          f"@ ({epoch}, {ep + 1})")
         except Exception:
             # a dead walker finishes the epoch with episodes missing, which
             # surfaces here as a KeyError — join to re-raise its real error.
@@ -153,11 +228,14 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
         auc = ev.auc_score(
             np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
             np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
-        print(f"epoch {epoch:3d} loss {np.mean(losses):.4f} AUC {auc:.4f} "
-              f"({time.perf_counter()-t0:.1f}s)")
+        loss_s = f"{np.mean(losses):.4f}" if losses else "--"
+        print(f"epoch {epoch:3d} loss {loss_s} AUC {auc:.4f} "
+              f"({time.perf_counter()-t0:.1f}s)"
+              + (f" [{len(pipe.recovered)} episode(s) re-walked]"
+                 if pipe.recovered else ""))
         if epoch + 1 < args.epochs:
             engine = nxt
-        if (epoch + 1) % args.ckpt_every == 0 or epoch + 1 == args.epochs:
+        if epoch + 1 == args.epochs:
             path = os.path.join(args.out_dir, f"embeddings_{epoch+1}.npz")
             save_checkpoint(path, {"vertex": V,
                                    "context": trainer.context_embeddings()},
@@ -216,7 +294,7 @@ def train_lm(args):
     pipe.close()
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tencent-embedding")
     ap.add_argument("--seed", type=int, default=0)
@@ -255,7 +333,25 @@ def main():
     ap.add_argument("--block-b", type=int, default=None,
                     help="pin the fused-kernel tile size (default: "
                          "VMEM-aware autotune in kernels.ops)")
-    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="episodes between atomic resume checkpoints "
+                         "(OUT_DIR/resume.npz: tables + cursor, crc-"
+                         "manifested; 0 = final artifact only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from OUT_DIR/resume.npz — restores tables "
+                         "+ (epoch, episode) cursor and replays the rest of "
+                         "the run bitwise-identically to an uninterrupted "
+                         "one (per-episode RNG streams are config-keyed)")
+    ap.add_argument("--inject", action="append", default=[], metavar="SPEC",
+                    help="deterministic fault spec, repeatable: "
+                         "site:kind[:opt=val]... e.g. walk.chunk:crash:at=5, "
+                         "train.episode:crash:key=6/1, "
+                         "disk.write:corrupt:at=0 (see repro.runtime.faults)")
+    ap.add_argument("--stall-timeout-s", type=float, default=None,
+                    help="seconds without sample-store progress before a "
+                         "blocked stage fails with StoreStalled diagnostics "
+                         "(default 600; <=0 disables the deadline — producer "
+                         "liveness detection still applies)")
     # streaming dataflow knobs
     ap.add_argument("--walk-workers", type=int, default=2,
                     help="walk-engine chunk worker threads (1 = inline; the "
@@ -293,7 +389,7 @@ def main():
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--save", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.arch == "tencent-embedding":
         args.lr = args.lr if args.lr is not None else 0.025
         train_embedding(args)

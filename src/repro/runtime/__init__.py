@@ -1,0 +1,42 @@
+"""Fault-tolerant runtime layer: deterministic fault injection, bounded
+retry, and watchdog deadlines.
+
+At the paper's deployment scale (3-minute epochs over ~300B edges on 40
+GPUs, with decoupled CPU walk machines) worker death, partial episode
+files and slow shards are routine events, not exceptions. This package is
+the shared substrate every stage of the walk → store → partition → train →
+serve path consults:
+
+* :mod:`repro.runtime.faults` — a deterministic, seed-keyed fault-injection
+  registry (``FaultPlan``). Stages call ``fault_point(site, key)`` at named
+  sites (``walk.chunk``, ``store.put``, ``disk.write``, ``train.episode``,
+  ``serve.shard``); an installed plan can crash, delay, or corrupt a
+  specific invocation, so failure paths are unit-testable instead of
+  theoretical. With no plan installed the check is a single module-level
+  ``None`` test — free on the hot path.
+* :mod:`repro.runtime.retry` — bounded retry with exponential backoff
+  (``RetryPolicy`` / ``call_with_retry``). The walk engine's
+  ``(seed, epoch, episode, chunk)`` RNG keying makes every retried unit of
+  work bitwise-replayable, so retry is semantics-preserving by
+  construction.
+* :mod:`repro.runtime.watchdog` — ``Deadline`` helpers replacing silent
+  infinite condition-variable waits with diagnostics-carrying
+  ``StoreStalled`` failures.
+* :mod:`repro.runtime.errors` — the shared failure vocabulary
+  (``InjectedFault``, ``StoreStalled``, ``CorruptEpisodeError``,
+  ``DeadlineExceeded``, ``Overloaded``).
+"""
+from repro.runtime.errors import (CorruptEpisodeError, DeadlineExceeded,
+                                  InjectedFault, Overloaded, StoreStalled)
+from repro.runtime.faults import (FaultPlan, FaultSpec, active_plan,
+                                  clear_plan, fault_point, inject,
+                                  install_plan)
+from repro.runtime.retry import RetryPolicy, call_with_retry
+from repro.runtime.watchdog import Deadline
+
+__all__ = [
+    "CorruptEpisodeError", "Deadline", "DeadlineExceeded", "FaultPlan",
+    "FaultSpec", "InjectedFault", "Overloaded", "RetryPolicy",
+    "StoreStalled", "active_plan", "call_with_retry", "clear_plan",
+    "fault_point", "inject", "install_plan",
+]

@@ -1,0 +1,65 @@
+"""Shared failure vocabulary for the fault-tolerant runtime.
+
+Every layer raises (and catches) these instead of ad-hoc RuntimeErrors, so
+recovery logic can be written once: a ``CorruptEpisodeError`` is retriable
+by re-walking the episode, a ``StoreStalled`` names exactly what was
+blocked and why, a ``DeadlineExceeded``/``Overloaded`` is a per-request
+serving outcome rather than a process failure.
+"""
+from __future__ import annotations
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``crash`` fault spec firing at a fault point.
+
+    Deliberately a distinct type: tests and CI chaos legs assert that a
+    failure was the injected one and not an incidental bug."""
+
+    def __init__(self, site: str, key=None):
+        self.site = site
+        self.key = key
+        super().__init__(f"injected fault at {site!r}"
+                         + (f" key={key!r}" if key is not None else ""))
+
+
+class StoreStalled(RuntimeError):
+    """A sample-store wait loop gave up: the producer died or the stall
+    deadline passed with no store progress.
+
+    Carries the diagnostics the old silent ``_cv.wait(60.0)`` spin threw
+    away: which key the waiter was blocked on, what was resident at the
+    time, and whether the producer looked alive."""
+
+    def __init__(self, op: str, key, *, resident, producer_alive,
+                 waited_s: float):
+        self.op = op
+        self.key = key
+        self.resident = tuple(resident)
+        self.producer_alive = producer_alive
+        self.waited_s = waited_s
+        alive = ("unknown" if producer_alive is None
+                 else "alive" if producer_alive else "DEAD")
+        super().__init__(
+            f"sample store stalled in {op} waiting on {key!r} "
+            f"({waited_s:.1f}s without progress); resident episodes: "
+            f"{sorted(self.resident)!r}; producer: {alive}")
+
+
+class CorruptEpisodeError(RuntimeError):
+    """An episode payload failed its integrity check (short file, checksum
+    mismatch). Retriable: the ``(seed, epoch, episode, chunk)`` RNG keying
+    means the episode can be re-walked bitwise-identically."""
+
+    def __init__(self, key, path: str, reason: str):
+        self.key = key
+        self.path = path
+        self.reason = reason
+        super().__init__(f"episode {key!r} corrupt at {path}: {reason}")
+
+
+class DeadlineExceeded(RuntimeError):
+    """A serving request's deadline passed before it was served."""
+
+
+class Overloaded(RuntimeError):
+    """A serving request was shed at admission because the queue was full."""

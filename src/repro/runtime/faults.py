@@ -1,0 +1,206 @@
+"""Deterministic fault-injection registry.
+
+Stages of the runtime declare named **fault sites** by calling
+:func:`fault_point` — e.g. ``walk.chunk`` before a chunk's walks are
+generated, ``disk.write`` before an episode file is published,
+``serve.shard`` inside a shard scan task. A :class:`FaultPlan` installed
+via :func:`install_plan` (or the :func:`inject` context manager, or the
+launchers' ``--inject`` flag) decides deterministically whether that
+invocation crashes (:class:`~repro.runtime.errors.InjectedFault`), sleeps,
+or asks the caller to corrupt its output.
+
+Determinism: a spec fires on the N-th invocation of its site
+(``at=N``, a per-site counter) and/or on an exact invocation key match
+(``key=...`` — the same ``(epoch, episode, chunk)``-style tuples that key
+the RNG streams), never on wall-clock or randomness, so a failure path
+replays identically run after run.
+
+Hot-path cost: with no plan installed ``fault_point`` is one module-level
+``None`` check. Sites sit at episode/chunk/request granularity — never
+per-sample — so the idle layer is free (gated by the ``faults_idle``
+dataflow row in ``BENCH_episode.json``).
+
+Spec string grammar (the CLI's ``--inject`` and ``FaultSpec.parse``)::
+
+    site:kind[:opt=val]...
+    kinds:  crash | delay | corrupt
+    opts:   at=N           fire on the N-th invocation of site (0-based)
+            key=a/b/c      fire only when the invocation key == (a, b, c)
+            times=N|inf    firings before the spec is spent (default 1)
+            delay=SECONDS  sleep length for kind=delay (default 0.05)
+
+    walk.chunk:crash:at=5          crash the 6th chunk walked
+    train.episode:crash:key=6/1    die right before training episode (6, 1)
+    serve.shard:delay:key=1:delay=0.5:times=inf   shard 1 is always slow
+    disk.write:corrupt:at=0        corrupt the first episode file written
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+
+from repro.runtime.errors import InjectedFault
+
+KINDS = ("crash", "delay", "corrupt")
+
+#: canonical site names (informative, not enforced — new subsystems add
+#: sites freely; tests use ad-hoc names)
+SITES = ("walk.chunk", "store.put", "disk.write", "train.episode",
+         "serve.shard")
+
+
+def _key_str(key) -> str | None:
+    if key is None:
+        return None
+    if isinstance(key, (tuple, list)):
+        return "/".join(str(k) for k in key)
+    return str(key)
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One deterministic fault: fire ``kind`` at ``site`` when the
+    invocation ordinal and/or key match."""
+
+    site: str
+    kind: str
+    at: int | None = None       # per-site invocation ordinal (0-based)
+    key: str | None = None      # "/"-joined invocation key to match
+    times: float = 1            # firings before spent (float("inf") = always)
+    delay_s: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.at is None and self.key is None:
+            # neither ordinal nor key: fire on every invocation (bounded
+            # by `times`, which defaults to 1 = first invocation only)
+            self.at = 0 if self.times == 1 else None
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultSpec":
+        parts = spec.split(":")
+        if len(parts) < 2:
+            raise ValueError(f"fault spec {spec!r}: want site:kind[:opt=val]")
+        site, kind, kw = parts[0], parts[1], {}
+        for opt in parts[2:]:
+            if "=" not in opt:
+                raise ValueError(f"fault spec option {opt!r}: want opt=val")
+            name, val = opt.split("=", 1)
+            if name == "at":
+                kw["at"] = int(val)
+            elif name == "key":
+                kw["key"] = val
+            elif name == "times":
+                kw["times"] = float("inf") if val == "inf" else int(val)
+            elif name == "delay":
+                kw["delay_s"] = float(val)
+            else:
+                raise ValueError(f"fault spec {spec!r}: unknown option "
+                                 f"{name!r} (at/key/times/delay)")
+        return cls(site, kind, **kw)
+
+    def matches(self, ordinal: int, key_s: str | None) -> bool:
+        if self.times <= 0:
+            return False
+        if self.at is not None and ordinal != self.at:
+            return False
+        if self.key is not None and key_s != self.key:
+            return False
+        return True
+
+
+class FaultPlan:
+    """A set of :class:`FaultSpec`\\ s plus per-site invocation counters.
+
+    Thread-safe: fault points fire from walk workers, pipeline stages and
+    serving threads concurrently; the counter handshake is locked so an
+    ``at=N`` spec fires exactly once even under races."""
+
+    def __init__(self, specs=()):
+        self.specs = [s if isinstance(s, FaultSpec) else FaultSpec.parse(s)
+                      for s in specs]
+        self._counts: dict[str, int] = {}
+        self._fired: list[tuple[str, str, object]] = []   # (site, kind, key)
+        self._mu = threading.Lock()
+
+    @property
+    def fired(self) -> list:
+        """(site, kind, key) log of every spec firing, in firing order."""
+        with self._mu:
+            return list(self._fired)
+
+    def count(self, site: str) -> int:
+        with self._mu:
+            return self._counts.get(site, 0)
+
+    def check(self, site: str, key=None) -> bool:
+        """Advance ``site``'s counter; fire matching specs. Returns True if
+        a ``corrupt`` spec fired; raises/sleeps for crash/delay."""
+        key_s = _key_str(key)
+        with self._mu:
+            n = self._counts.get(site, 0)
+            self._counts[site] = n + 1
+            todo = []
+            for s in self.specs:
+                if s.site == site and s.matches(n, key_s):
+                    s.times -= 1
+                    self._fired.append((site, s.kind, key))
+                    todo.append(s)
+        corrupt = False
+        for s in todo:                     # outside the lock: may sleep/raise
+            if s.kind == "delay":
+                time.sleep(s.delay_s)
+            elif s.kind == "corrupt":
+                corrupt = True
+            else:
+                raise InjectedFault(site, key)
+        return corrupt
+
+
+# ------------------------------------------------------------------ registry
+_PLAN: FaultPlan | None = None
+
+
+def install_plan(plan: FaultPlan | None) -> None:
+    """Install the process-wide plan (None = clear)."""
+    global _PLAN
+    _PLAN = plan
+
+
+def clear_plan() -> None:
+    install_plan(None)
+
+
+def active_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+def fault_point(site: str, key=None) -> bool:
+    """Declare a fault site. No plan installed → immediate False (the
+    no-op hot path). Returns True when a ``corrupt`` spec fired; a
+    ``crash`` spec raises :class:`InjectedFault`; ``delay`` sleeps."""
+    plan = _PLAN
+    if plan is None:
+        return False
+    return plan.check(site, key)
+
+
+@contextlib.contextmanager
+def inject(*specs):
+    """Scoped plan installation for tests::
+
+        with inject("walk.chunk:crash:at=2") as plan:
+            ...
+        assert plan.fired
+    """
+    plan = FaultPlan(specs)
+    prev = _PLAN
+    install_plan(plan)
+    try:
+        yield plan
+    finally:
+        install_plan(prev)

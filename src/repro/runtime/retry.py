@@ -1,0 +1,51 @@
+"""Bounded retry with exponential backoff.
+
+The walk engine keys every chunk's RNG stream by
+``(seed, epoch, episode, chunk)``, so replaying a failed unit of work
+produces bitwise-identical output — retry is semantics-preserving by
+construction (test-gated in ``tests/test_runtime.py``). This module is the
+one retry-loop implementation, so attempt accounting and backoff behave
+the same at every call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """``attempts`` total tries (1 = no retry); backoff before try i is
+    ``backoff_s * mult**(i-1)`` seconds."""
+
+    attempts: int = 3
+    backoff_s: float = 0.05
+    mult: float = 2.0
+    retry_on: tuple = (Exception,)
+
+    def delays(self):
+        d = self.backoff_s
+        for _ in range(max(0, self.attempts - 1)):
+            yield d
+            d *= self.mult
+
+
+def call_with_retry(fn, *args, policy: RetryPolicy = RetryPolicy(),
+                    on_retry=None, **kwargs):
+    """Run ``fn(*args, **kwargs)``, retrying per ``policy``.
+
+    ``on_retry(attempt, exc)`` is called before each backoff sleep (attempt
+    is the 1-based number of the try that just failed) — callers log there.
+    The final failure re-raises the last exception unchanged, so callers
+    see the real error, not a wrapper."""
+    attempts = max(1, policy.attempts)
+    delays = policy.delays()
+    for attempt in range(1, attempts + 1):
+        try:
+            return fn(*args, **kwargs)
+        except policy.retry_on as e:  # noqa: PERF203 — the retry loop
+            if attempt >= attempts:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            time.sleep(next(delays))

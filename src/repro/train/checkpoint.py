@@ -8,15 +8,35 @@ parity gate) need special care: ``np.savez`` stores them as raw void bytes
 ("|V2") and loses the type, so save records each such leaf's dtype name
 under a ``__dtype__:<key>`` entry and load view-casts the bytes back —
 bitwise, which is what the serving store's round-trip guarantee relies on.
+
+Integrity: save records a ``__manifest__`` (the expected key list) and a
+``__crc__:<key>`` (crc32, byte length) entry per array, all written via
+tmp + ``os.replace`` so a crash mid-save never clobbers the previous good
+checkpoint. ``load_arrays(verify=True)`` — the default — checks every
+entry against its checksum *as stored* (before any dtype view-cast) and
+raises :class:`CheckpointCorrupt` on mismatch or missing keys, so a torn
+or bit-flipped resume file fails loudly instead of resuming from garbage.
 """
 from __future__ import annotations
 
 import os
+import zipfile
+import zlib
 
 import jax
 import numpy as np
 
 _DTYPE_PREFIX = "__dtype__:"
+_CRC_PREFIX = "__crc__:"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed its manifest/checksum verification."""
+
+    def __init__(self, path: str, reason: str):
+        self.path = path
+        self.reason = reason
+        super().__init__(f"checkpoint {path} corrupt: {reason}")
 
 
 def _named_dtype(name: str) -> np.dtype:
@@ -39,30 +59,69 @@ def _flatten_with_names(tree):
     return out
 
 
-def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
+def _crc(arr: np.ndarray) -> np.ndarray:
+    b = np.ascontiguousarray(arr).tobytes()
+    return np.asarray([zlib.crc32(b), len(b)], dtype=np.int64)
+
+
+def save_checkpoint(path: str, tree, *, step: int | None = None,
+                    extra: dict | None = None) -> None:
+    """Atomically write the tree (plus optional ``extra`` arrays, e.g. a
+    resume cursor) with a per-entry checksum manifest."""
     arrs = _flatten_with_names(tree)
     if step is not None:
         arrs["__step__"] = np.asarray(step)
+    for key, val in (extra or {}).items():
+        arrs[key] = np.asarray(val)
     # extension dtypes (kind "V": bfloat16 & friends) lose their identity in
     # the npz; record the name so load_arrays can view-cast the bytes back
     for key, arr in list(arrs.items()):
         if arr.dtype.kind == "V":
             arrs[_DTYPE_PREFIX + key] = np.asarray(arr.dtype.name)
+    for key, arr in list(arrs.items()):
+        arrs[_CRC_PREFIX + key] = _crc(arr)
+    arrs["__manifest__"] = np.asarray(sorted(k for k in arrs
+                                             if not k.startswith(_CRC_PREFIX)))
     tmp = path + ".tmp"
     np.savez(tmp, **arrs)
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
 
 
-def load_arrays(path: str):
+def load_arrays(path: str, *, verify: bool = True):
     """Raw ``key -> array`` view of a checkpoint, plus its step.
 
     This is the loading path for consumers that know the key they want but
     not the full tree template (e.g. ``embed_serve.store`` pulling one
     embedding table out of a training checkpoint). Extension-dtype leaves
-    come back bitwise in their original dtype.
+    come back bitwise in their original dtype. ``verify`` (default) checks
+    the manifest and per-entry checksums — bytes as stored, before any
+    view-cast — raising :class:`CheckpointCorrupt` on any mismatch;
+    pre-manifest checkpoints (no ``__manifest__`` entry) load unverified
+    for compatibility.
     """
-    with np.load(path) as f:
-        data = {k: f[k] for k in f.files}
+    try:
+        with np.load(path) as f:
+            data = {k: f[k] for k in f.files}
+    except (ValueError, EOFError, OSError, zipfile.BadZipFile) as e:
+        raise CheckpointCorrupt(path, f"unreadable npz: {e}") from e
+    crcs = {k[len(_CRC_PREFIX):]: data.pop(k)
+            for k in list(data) if k.startswith(_CRC_PREFIX)}
+    manifest = data.pop("__manifest__", None)
+    if verify and manifest is not None:
+        want = set(str(k) for k in manifest.tolist())
+        have = set(data)
+        if want != have:
+            missing, stray = sorted(want - have), sorted(have - want)
+            raise CheckpointCorrupt(
+                path, f"manifest mismatch: missing={missing} stray={stray}")
+        for key, arr in data.items():
+            got = _crc(arr)
+            exp = crcs.get(key)
+            if exp is None or not np.array_equal(got, np.asarray(exp)):
+                raise CheckpointCorrupt(
+                    path, f"checksum mismatch for {key!r} "
+                          f"(got {got.tolist()}, want "
+                          f"{None if exp is None else np.asarray(exp).tolist()})")
     step = int(data.pop("__step__", -1))
     names = {k[len(_DTYPE_PREFIX):]: str(data.pop(k).item())
              for k in list(data) if k.startswith(_DTYPE_PREFIX)}
@@ -72,8 +131,8 @@ def load_arrays(path: str):
     return data, step
 
 
-def restore_checkpoint(path: str, template):
-    data, step = load_arrays(path)
+def restore_checkpoint(path: str, template, *, verify: bool = True):
+    data, step = load_arrays(path, verify=verify)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:

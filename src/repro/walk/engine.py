@@ -20,6 +20,14 @@ e+1's walks. Because the chunk decomposition and per-chunk RNG streams are
 fixed by the config — never by the worker count — the sample stream is
 bitwise identical for any ``workers`` setting, including the synchronous
 ``workers=1`` path.
+
+Fault tolerance: each chunk is a retriable unit — its RNG stream is fixed
+by (seed, epoch, episode, chunk), so a crashed chunk replayed under
+``WalkConfig.retries`` produces bitwise-identical pairs (test-gated). The
+``walk.chunk`` fault site sits at the top of the chunk body;
+:meth:`WalkEngine.alive` feeds the store's producer-liveness watchdog so a
+walker that exhausts its retries fails consumers loudly instead of leaving
+them blocked.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.runtime import RetryPolicy, call_with_retry, fault_point
 from repro.walk.augment import walks_to_pairs
 from repro.walk.store import SampleStore
 
@@ -55,6 +64,11 @@ class WalkConfig:
     workers: int = 1
     chunk_size: int = 4096
     lookahead: int = 2
+    # fault tolerance: total tries per chunk (1 = fail on first error) and
+    # the base backoff between them. Replay is bitwise-safe: the chunk's RNG
+    # stream depends only on (seed, epoch, episode, chunk).
+    retries: int = 3
+    retry_backoff_s: float = 0.05
 
 
 class WalkEngine:
@@ -150,6 +164,7 @@ class WalkEngine:
         """Walks + augmentation for one start-node chunk. The RNG stream is
         keyed by (seed, epoch, episode, chunk) — independent of which worker
         runs it and of the worker count."""
+        fault_point("walk.chunk", (epoch, episode, chunk))
         t0 = time.perf_counter()
         cfg = self.config
         rng = np.random.default_rng(
@@ -161,6 +176,16 @@ class WalkEngine:
             key = (epoch, episode)
             self.episode_walk_s[key] = self.episode_walk_s.get(key, 0.0) + dt
         return pairs
+
+    def _chunk_retrying(self, epoch: int, episode: int, chunk: int,
+                        starts: np.ndarray) -> np.ndarray:
+        """`_chunk_pairs` under the configured retry policy. Replay is
+        bitwise-identical (RNG keyed by the chunk, not the attempt)."""
+        cfg = self.config
+        return call_with_retry(
+            self._chunk_pairs, epoch, episode, chunk, starts,
+            policy=RetryPolicy(attempts=max(1, cfg.retries),
+                               backoff_s=cfg.retry_backoff_s))
 
     def _episode_chunks(self, starts: np.ndarray) -> list[np.ndarray]:
         c = max(1, self.config.chunk_size)
@@ -186,7 +211,7 @@ class WalkEngine:
         if cfg.workers <= 1:
             for ep, starts in enumerate(parts):
                 pairs = self._assemble(
-                    [self._chunk_pairs(epoch, ep, c, s)
+                    [self._chunk_retrying(epoch, ep, c, s)
                      for c, s in enumerate(self._episode_chunks(starts))])
                 self.store.put(epoch, ep, pairs)
             self.store.finish_epoch(epoch)
@@ -197,7 +222,7 @@ class WalkEngine:
         futs: dict[int, list] = {}
 
         def submit(ep: int) -> None:
-            futs[ep] = [pool.submit(self._chunk_pairs, epoch, ep, c, s)
+            futs[ep] = [pool.submit(self._chunk_retrying, epoch, ep, c, s)
                         for c, s in enumerate(self._episode_chunks(parts[ep]))]
 
         try:
@@ -218,8 +243,23 @@ class WalkEngine:
         pool.shutdown(wait=True)
         self.store.finish_epoch(epoch)
 
+    def episode_pairs(self, epoch: int, episode: int) -> np.ndarray:
+        """Regenerate one episode's pairs directly (no store interaction).
+
+        Deterministic replay for corrupt-episode recovery: the chunk
+        decomposition and RNG keys depend only on the config, so this is
+        bitwise-identical to what the original walk produced."""
+        starts = self._episode_starts(epoch)[episode]
+        return self._assemble(
+            [self._chunk_retrying(epoch, episode, c, s)
+             for c, s in enumerate(self._episode_chunks(starts))])
+
     # ------------------------------------------------------------ async mode
     def start_async(self, epoch: int) -> None:
+        set_producer = getattr(self.store, "set_producer", None)
+        if callable(set_producer):
+            set_producer(self.alive)
+
         def _run():
             try:
                 self.run_epoch(epoch)
@@ -234,6 +274,13 @@ class WalkEngine:
     def finished(self) -> bool:
         """True once the async epoch (if any) has fully completed."""
         return self._thread is None or not self._thread.is_alive()
+
+    def alive(self) -> bool:
+        """Producer-liveness probe for the store watchdogs. True while the
+        async walker thread is running — or before/without one (sync use:
+        no thread means the caller IS the producer, which is trivially
+        alive)."""
+        return self._thread is None or self._thread.is_alive()
 
     def join(self) -> None:
         if self._thread is not None:

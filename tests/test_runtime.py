@@ -1,0 +1,610 @@
+"""Fault-tolerant runtime: deterministic injection, retry, watchdogs,
+crash-resume training, degraded serving.
+
+Failure-path coverage the happy-path suites can't give: every fault here is
+injected deterministically (``repro.runtime.faults``), so each scenario —
+crashed chunk, torn episode file, mid-epoch kill, slow shard — replays
+identically run after run, and the recovery invariants (bitwise-identical
+retry/resume, surviving-shards exactness) are assertable, not statistical.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import powerlaw_graph
+from repro.runtime import (CorruptEpisodeError, Deadline, DeadlineExceeded,
+                           FaultPlan, FaultSpec, InjectedFault, Overloaded,
+                           RetryPolicy, StoreStalled, call_with_retry,
+                           clear_plan, fault_point, inject, install_plan)
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+from repro.walk.store import DiskSampleStore
+
+
+# ---------------------------------------------------------------------------
+# fault plan
+# ---------------------------------------------------------------------------
+def test_fault_spec_parse():
+    s = FaultSpec.parse("walk.chunk:crash:at=5")
+    assert (s.site, s.kind, s.at, s.key) == ("walk.chunk", "crash", 5, None)
+    s = FaultSpec.parse("serve.shard:delay:key=1:delay=0.5:times=inf")
+    assert s.key == "1" and s.delay_s == 0.5 and s.times == float("inf")
+    s = FaultSpec.parse("train.episode:crash:key=6/1")
+    assert s.key == "6/1"
+    with pytest.raises(ValueError):
+        FaultSpec.parse("walk.chunk")            # no kind
+    with pytest.raises(ValueError):
+        FaultSpec.parse("walk.chunk:explode")    # unknown kind
+    with pytest.raises(ValueError):
+        FaultSpec.parse("walk.chunk:crash:frobnicate=1")
+
+
+def test_fault_plan_fires_on_ordinal_exactly_once():
+    plan = FaultPlan(["site.a:crash:at=2"])
+    install_plan(plan)
+    try:
+        assert fault_point("site.a") is False     # ordinal 0
+        assert fault_point("site.a") is False     # ordinal 1
+        with pytest.raises(InjectedFault):
+            fault_point("site.a")                 # ordinal 2: fires
+        assert fault_point("site.a") is False     # spec is spent
+        assert plan.count("site.a") == 4
+        assert plan.fired == [("site.a", "crash", None)]
+    finally:
+        clear_plan()
+
+
+def test_fault_plan_fires_on_key_and_corrupt_returns_true():
+    with inject("disk.write:corrupt:key=0/2") as plan:
+        assert fault_point("disk.write", (0, 0)) is False
+        assert fault_point("disk.write", (0, 2)) is True
+        assert fault_point("disk.write", (0, 2)) is False   # times=1: spent
+        assert plan.fired == [("disk.write", "corrupt", (0, 2))]
+    # context manager restored the empty registry
+    assert fault_point("disk.write", (0, 2)) is False
+
+
+def test_fault_plan_no_plan_is_noop():
+    clear_plan()
+    assert fault_point("anything", (1, 2, 3)) is False
+
+
+def test_fault_plan_is_deterministic_across_replays():
+    def run():
+        log = []
+        with inject("s:crash:at=1:times=2"):
+            for i in range(6):
+                try:
+                    fault_point("s", (i,))
+                    log.append("ok")
+                except InjectedFault:
+                    log.append("crash")
+        return log
+
+    assert run() == run() == ["ok", "crash", "ok", "ok", "ok", "ok"]
+
+
+def test_fault_plan_delay_sleeps():
+    with inject("s:delay:at=0:delay=0.15"):
+        t0 = time.perf_counter()
+        fault_point("s")
+        assert time.perf_counter() - t0 >= 0.14
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+def test_call_with_retry_recovers_and_reraises():
+    calls = []
+
+    def flaky(n):
+        calls.append(n)
+        if len(calls) < 3:
+            raise ValueError("transient")
+        return n * 2
+
+    assert call_with_retry(flaky, 21,
+                           policy=RetryPolicy(attempts=3,
+                                              backoff_s=0.001)) == 42
+    assert len(calls) == 3
+
+    def hopeless():
+        raise ValueError("permanent")
+
+    seen = []
+    with pytest.raises(ValueError, match="permanent"):
+        call_with_retry(hopeless,
+                        policy=RetryPolicy(attempts=3, backoff_s=0.001),
+                        on_retry=lambda a, e: seen.append(a))
+    assert seen == [1, 2]      # no on_retry after the final failure
+
+
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(attempts=4, backoff_s=0.1, mult=2.0)
+    assert list(p.delays()) == pytest.approx([0.1, 0.2, 0.4])
+
+
+# ---------------------------------------------------------------------------
+# walk-chunk crash -> retry -> bitwise parity
+# ---------------------------------------------------------------------------
+def _drain(store, epoch, episodes):
+    return [np.asarray(store.get(epoch, ep)) for ep in range(episodes)]
+
+
+def test_walk_chunk_crash_retry_is_bitwise_identical():
+    g = powerlaw_graph(400, 4, seed=7)
+    cfg = WalkConfig(walk_length=8, window=3, episodes=3, seed=11,
+                     chunk_size=64, workers=2, retry_backoff_s=0.001)
+
+    ref_store = MemorySampleStore()
+    WalkEngine(g, cfg, ref_store).run_epoch(0)
+    ref = _drain(ref_store, 0, cfg.episodes)
+
+    # crash the 4th and 9th chunk attempts: retry replays each chunk's
+    # RNG stream from its (seed, epoch, episode, chunk) key
+    with inject("walk.chunk:crash:at=3", "walk.chunk:crash:at=8") as plan:
+        got_store = MemorySampleStore()
+        WalkEngine(g, cfg, got_store).run_epoch(0)
+        got = _drain(got_store, 0, cfg.episodes)
+    assert [k for _, k, _ in plan.fired] == ["crash", "crash"]
+    assert len(ref) == len(got)
+    for r, o in zip(ref, got):
+        np.testing.assert_array_equal(r, o)
+
+
+def test_walk_retries_exhausted_fails_loudly():
+    g = powerlaw_graph(100, 3, seed=1)
+    cfg = WalkConfig(episodes=2, workers=1, retries=2, retry_backoff_s=0.001,
+                     chunk_size=256)
+    store = MemorySampleStore()
+    eng = WalkEngine(g, cfg, store)
+    # times=inf: the crash outlives every retry attempt
+    with inject("walk.chunk:crash:key=0/0/0:times=inf"):
+        eng.start_async(0)
+        with pytest.raises(KeyError):
+            store.get(0, 0)       # error path finishes the epoch -> KeyError
+        with pytest.raises(InjectedFault):
+            eng.join()
+
+
+def test_episode_pairs_matches_streamed_output():
+    g = powerlaw_graph(300, 4, seed=2)
+    cfg = WalkConfig(episodes=2, seed=5, chunk_size=128)
+    store = MemorySampleStore()
+    eng = WalkEngine(g, cfg, store)
+    eng.run_epoch(0)
+    for ep in range(cfg.episodes):
+        np.testing.assert_array_equal(np.asarray(store.get(0, ep)),
+                                      eng.episode_pairs(0, ep))
+
+
+# ---------------------------------------------------------------------------
+# watchdogs: no wait loop blocks forever
+# ---------------------------------------------------------------------------
+def test_get_fails_fast_when_producer_is_dead():
+    store = MemorySampleStore(stall_timeout_s=30.0)
+    store.set_producer(lambda: False)       # walker is provably gone
+    t0 = time.perf_counter()
+    with pytest.raises(StoreStalled) as ei:
+        store.get(0, 0)
+    assert time.perf_counter() - t0 < 5.0   # liveness, not the deadline
+    assert ei.value.producer_alive is False
+    assert ei.value.op == "get" and ei.value.key == (0, 0)
+    assert "DEAD" in str(ei.value)
+
+
+def test_get_stall_deadline_with_unknown_producer():
+    store = MemorySampleStore(stall_timeout_s=0.4)
+    t0 = time.perf_counter()
+    with pytest.raises(StoreStalled) as ei:
+        store.get(0, 0)
+    waited = time.perf_counter() - t0
+    assert 0.3 <= waited < 5.0
+    assert ei.value.producer_alive is None
+
+
+def test_put_backpressure_stall_names_resident_episodes():
+    store = MemorySampleStore(depth=1, stall_timeout_s=0.4)
+    pairs = np.zeros((4, 2), np.int32)
+    store.put(0, 0, pairs)
+    with pytest.raises(StoreStalled) as ei:
+        store.put(0, 1, pairs)              # nobody is draining
+    assert ei.value.op == "put"
+    assert (0, 0) in ei.value.resident
+
+
+def test_progress_resets_the_stall_deadline():
+    store = MemorySampleStore(depth=1, stall_timeout_s=0.8)
+    pairs = np.zeros((4, 2), np.int32)
+    store.put(0, 0, pairs)
+
+    def slow_consumer():
+        for ep in range(3):
+            time.sleep(0.5)                 # slower than poll, under deadline
+            store.drop(0, ep)
+
+    t = threading.Thread(target=slow_consumer, daemon=True)
+    t.start()
+    for ep in range(1, 4):                  # total wall > deadline, but each
+        store.put(0, ep, pairs)             # wait sees progress and resets
+    t.join()
+
+
+def test_disk_get_fails_fast_when_producer_is_dead(tmp_path):
+    store = DiskSampleStore(str(tmp_path), stall_timeout_s=30.0)
+    store.set_producer(lambda: False)
+    t0 = time.perf_counter()
+    with pytest.raises(StoreStalled):
+        store.get(0, 0)
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_dead_async_walker_fails_consumer_via_liveness():
+    g = powerlaw_graph(100, 3, seed=1)
+    store = MemorySampleStore(stall_timeout_s=30.0)
+    eng = WalkEngine(g, WalkConfig(episodes=2), store)
+
+    # a walker that dies WITHOUT the error path's finish_epoch (simulating
+    # a hard kill): run_epoch raises before any cleanup
+    def hard_die(epoch):
+        raise RuntimeError("killed")
+
+    eng.run_epoch = hard_die
+    eng._thread = threading.Thread(target=lambda: None, daemon=True)
+    eng._thread.start()
+    eng._thread.join()                      # thread object exists and is dead
+    store.set_producer(eng.alive)
+    with pytest.raises(StoreStalled) as ei:
+        store.get(0, 0)
+    assert ei.value.producer_alive is False
+
+
+# ---------------------------------------------------------------------------
+# disk integrity: torn writes detected + recovered
+# ---------------------------------------------------------------------------
+def test_disk_corrupt_write_detected(tmp_path):
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.arange(40, dtype=np.int32).reshape(-1, 2)
+    with inject("disk.write:corrupt:at=0"):
+        store.put(0, 0, pairs)
+    with pytest.raises(CorruptEpisodeError) as ei:
+        store.get(0, 0, block=False)
+    assert ei.value.key == (0, 0)
+    # the repair path: rewrite republishes checksummed content
+    store.rewrite(0, 0, pairs)
+    np.testing.assert_array_equal(np.asarray(store.get(0, 0)), pairs)
+
+
+def test_disk_bitflip_detected_by_checksum(tmp_path):
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.arange(40, dtype=np.int32).reshape(-1, 2)
+    store.put(0, 0, pairs)
+    path = store._path(0, 0)
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0xFF                        # same length, different bytes
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(CorruptEpisodeError, match="checksum"):
+        store.get(0, 0, block=False)
+
+
+def test_pipeline_rewalks_corrupt_episode_bitwise(tmp_path):
+    from repro.core import EpisodePipeline
+    from repro.core.partition import NodePartition
+
+    g = powerlaw_graph(300, 4, seed=3)
+    cfg = WalkConfig(episodes=2, seed=9, chunk_size=128)
+    store = DiskSampleStore(str(tmp_path))
+    eng = WalkEngine(g, cfg, store)
+    with inject("disk.write:corrupt:key=0/1"):
+        eng.run_epoch(0)
+
+    part = NodePartition(g.num_nodes, dims=(1,), subparts=2)
+    rewalker = WalkEngine(g, cfg, store)    # never started: pure regenerator
+    pipe = EpisodePipeline(store, part, pad_multiple=8,
+                           rewalk=rewalker.episode_pairs)
+    try:
+        ref = EpisodePipeline(store, part, pad_multiple=8)
+        clean = ref._get_pairs(0, 0)        # episode 0 was written clean
+        eb0 = pipe.get(0, 0)
+        eb1 = pipe.get(0, 1)                # corrupt on disk: re-walked
+        assert pipe.recovered == [(0, 1)]
+        assert eb1.blocks is not None
+        ref.close()
+    finally:
+        pipe.close()
+    # the repair rewrote the file: a fresh reader now gets valid content,
+    # bitwise equal to the deterministic replay
+    np.testing.assert_array_equal(np.asarray(store.get(0, 1)),
+                                  rewalker.episode_pairs(0, 1))
+    del clean, eb0
+
+
+def test_disk_drop_removes_checksum_sidecar(tmp_path):
+    store = DiskSampleStore(str(tmp_path), keep=False)
+    store.put(0, 0, np.zeros((4, 2), np.int32))
+    assert os.path.exists(store._path(0, 0) + ".crc")
+    store.drop(0, 0)
+    assert not os.path.exists(store._path(0, 0))
+    assert not os.path.exists(store._path(0, 0) + ".crc")
+
+
+def test_disk_fresh_clears_stale_checksums(tmp_path):
+    a = DiskSampleStore(str(tmp_path))
+    a.put(0, 0, np.zeros((4, 2), np.int32))
+    a.finish_epoch(0)
+    b = DiskSampleStore(str(tmp_path), fresh=True)
+    assert not any(f.endswith((".npy", ".crc", ".done"))
+                   for f in os.listdir(str(tmp_path)))
+    del b
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+# ---------------------------------------------------------------------------
+def test_checkpoint_crc_roundtrip_and_tamper(tmp_path):
+    import ml_dtypes
+
+    from repro.train.checkpoint import (CheckpointCorrupt, load_arrays,
+                                        save_checkpoint)
+
+    path = str(tmp_path / "ck.npz")
+    vert = np.arange(64, dtype=np.float32).reshape(8, 8).astype(
+        ml_dtypes.bfloat16)
+    ctx = np.ones((8, 8), np.float32)
+    save_checkpoint(path, {"vertex": vert, "context": ctx}, step=3,
+                    extra={"__cursor__": np.asarray([1, 2], np.int64)})
+    data, step = load_arrays(path)
+    assert step == 3
+    assert data["vertex"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(data["vertex"], vert)    # bitwise
+    np.testing.assert_array_equal(data["__cursor__"], [1, 2])
+
+    # tamper with one table without refreshing its checksum
+    raw = dict(np.load(path))
+    bad = raw["context"].copy()
+    bad[0, 0] += 1.0
+    raw["context"] = bad
+    tampered = str(tmp_path / "bad.npz")
+    np.savez(tampered, **raw)
+    with pytest.raises(CheckpointCorrupt, match="checksum"):
+        load_arrays(tampered)
+    # a dropped key is a manifest failure
+    raw2 = {k: v for k, v in dict(np.load(path)).items() if k != "context"}
+    short = str(tmp_path / "short.npz")
+    np.savez(short, **raw2)
+    with pytest.raises(CheckpointCorrupt, match="manifest"):
+        load_arrays(short)
+    # truncated container fails loudly too
+    with open(path, "rb") as f:
+        head = f.read(100)
+    trunc = str(tmp_path / "trunc.npz")
+    with open(trunc, "wb") as f:
+        f.write(head)
+    with pytest.raises(CheckpointCorrupt):
+        load_arrays(trunc)
+
+
+# ---------------------------------------------------------------------------
+# crash-resume training: kill mid-epoch, resume, bitwise-identical result
+# ---------------------------------------------------------------------------
+_TRAIN_ARGS = ["--arch", "tencent-embedding", "--nodes", "240", "--dim", "16",
+               "--epochs", "2", "--episodes", "3", "--subparts", "2",
+               "--minibatch", "32", "--negatives", "4", "--neg-pool", "256",
+               "--walk-workers", "2", "--seed", "3"]
+
+
+def test_crash_resume_training_is_bitwise_identical(tmp_path):
+    from repro.launch.train import main as train_main
+    from repro.train.checkpoint import load_arrays
+
+    ref_dir = str(tmp_path / "ref")
+    chaos_dir = str(tmp_path / "chaos")
+    train_main(_TRAIN_ARGS + ["--out-dir", ref_dir])
+
+    # the run dies right before training episode (1, 1) — mid-epoch, with a
+    # resume checkpoint written after every episode
+    with pytest.raises(InjectedFault):
+        train_main(_TRAIN_ARGS + ["--out-dir", chaos_dir, "--ckpt-every", "1",
+                                  "--inject", "train.episode:crash:key=1/1"])
+    cur, _ = load_arrays(os.path.join(chaos_dir, "resume.npz"))
+    assert cur["__cursor__"].tolist() == [1, 1]
+    assert not os.path.exists(os.path.join(chaos_dir, "embeddings_2.npz"))
+
+    train_main(_TRAIN_ARGS + ["--out-dir", chaos_dir, "--ckpt-every", "1",
+                              "--resume"])
+    ref, _ = load_arrays(os.path.join(ref_dir, "embeddings_2.npz"))
+    got, _ = load_arrays(os.path.join(chaos_dir, "embeddings_2.npz"))
+    for key in ("vertex", "context"):
+        assert ref[key].dtype == got[key].dtype
+        np.testing.assert_array_equal(
+            np.asarray(ref[key]).view(np.uint8),
+            np.asarray(got[key]).view(np.uint8),
+            err_msg=f"{key} table diverged after crash-resume")
+
+
+def test_walker_crash_mid_pipeline_resume(tmp_path):
+    """Chunk crashes under retry + a later hard kill: the retried stream is
+    worker-count-invariant and the resumed run still converges bitwise."""
+    from repro.launch.train import main as train_main
+    from repro.train.checkpoint import load_arrays
+
+    ref_dir = str(tmp_path / "ref")
+    chaos_dir = str(tmp_path / "chaos")
+    train_main(_TRAIN_ARGS + ["--out-dir", ref_dir])
+    with pytest.raises(InjectedFault):
+        train_main(_TRAIN_ARGS + ["--out-dir", chaos_dir, "--ckpt-every", "2",
+                                  "--inject", "walk.chunk:crash:at=2",
+                                  "--inject", "train.episode:crash:key=1/2"])
+    train_main(_TRAIN_ARGS + ["--out-dir", chaos_dir, "--ckpt-every", "2",
+                              "--resume"])
+    ref, _ = load_arrays(os.path.join(ref_dir, "embeddings_2.npz"))
+    got, _ = load_arrays(os.path.join(chaos_dir, "embeddings_2.npz"))
+    np.testing.assert_array_equal(np.asarray(ref["vertex"]).view(np.uint8),
+                                  np.asarray(got["vertex"]).view(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# degraded serving
+# ---------------------------------------------------------------------------
+def _mk_store(n=60, d=16, shards=3, **kw):
+    import jax
+
+    from repro.embed_serve import ShardedEmbeddingStore
+
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(n, d)).astype(np.float32)
+    dev = jax.devices()[0]
+    return ShardedEmbeddingStore.from_array(table, devices=[dev] * shards,
+                                            **kw)
+
+
+def test_degraded_topk_matches_surviving_shards_oracle():
+    from repro.embed_serve import recall_at_k
+
+    store = _mk_store()
+    q = np.random.default_rng(1).normal(size=(8, 16)).astype(np.float32)
+    k = 5
+
+    # healthy timed path == healthy fast path == full oracle
+    gv, gi, meta = store.topk(q, k, impl="xla", shard_timeout_s=10.0,
+                              return_meta=True)
+    assert not meta.degraded and meta.failed_shards == ()
+    fv, fi = store.topk(q, k, impl="xla")
+    np.testing.assert_array_equal(gi, fi)
+
+    # shard 1 sleeps past the deadline on every scan
+    with inject("serve.shard:delay:key=1:delay=2.0:times=inf"):
+        gv, gi, meta = store.topk(q, k, impl="xla", shard_timeout_s=0.3,
+                                  return_meta=True)
+    assert meta.degraded and meta.failed_shards == (1,)
+    ov, oi = store.oracle_topk(q, k, exclude_shards=(1,))
+    recall = recall_at_k(gi, oi, got_vals=store.score_ids(q, gi),
+                         oracle_vals=ov)
+    assert recall == 1.0
+    # degraded answers must NOT contain the failed shard's rows
+    rows = store.part.padded_rows_per_shard
+    assert not np.any((gi >= rows) & (gi < 2 * rows))
+
+
+def test_degraded_topk_crashed_shard_is_excluded():
+    store = _mk_store()
+    q = np.random.default_rng(2).normal(size=(4, 16)).astype(np.float32)
+    with inject("serve.shard:crash:key=2:times=inf"):
+        _, gi, meta = store.topk(q, 5, impl="xla", shard_timeout_s=5.0,
+                                 return_meta=True)
+    assert meta.failed_shards == (2,)
+    ov, oi = store.oracle_topk(q, 5, exclude_shards=(2,))
+    from repro.embed_serve import recall_at_k
+    assert recall_at_k(gi, oi, got_vals=store.score_ids(q, gi),
+                       oracle_vals=ov) == 1.0
+
+
+def test_all_shards_failed_raises():
+    store = _mk_store()
+    q = np.zeros((2, 16), np.float32)
+    with inject(*[f"serve.shard:crash:key={s}:times=inf" for s in range(3)]):
+        with pytest.raises(RuntimeError, match="all .* shard"):
+            store.topk(q, 5, impl="xla", shard_timeout_s=5.0)
+
+
+def test_store_default_shard_timeout_applies():
+    store = _mk_store(shard_timeout_s=0.3)
+    q = np.zeros((2, 16), np.float32)
+    store.topk(q, 5, impl="xla", shard_timeout_s=None)   # compile warmup
+    with inject("serve.shard:delay:key=0:delay=2.0:times=inf"):
+        _, _, meta = store.topk(q, 5, impl="xla", return_meta=True)
+    assert meta.degraded and meta.failed_shards == (0,)
+
+
+# ---------------------------------------------------------------------------
+# batcher: deadlines + shedding
+# ---------------------------------------------------------------------------
+def test_batcher_expires_requests_past_deadline():
+    from repro.embed_serve import MicroBatcher
+
+    def slow_serve(q):
+        time.sleep(0.25)
+        return np.zeros((q.shape[0], 3), np.float32), \
+            np.zeros((q.shape[0], 3), np.int32)
+
+    with MicroBatcher(slow_serve, dim=4, max_batch=1, window_ms=0.1,
+                      pad_multiple=1, deadline_ms=60.0) as b:
+        futs = [b.submit(np.zeros(4, np.float32)) for _ in range(5)]
+        outcomes = []
+        for f in futs:
+            try:
+                f.result(timeout=10.0)      # nothing hangs past its deadline
+                outcomes.append("served")
+            except DeadlineExceeded:
+                outcomes.append("expired")
+    assert outcomes[0] == "served"
+    assert "expired" in outcomes            # the tail waited > 60ms queued
+    assert b.stats.expired == outcomes.count("expired")
+
+
+def test_batcher_sheds_on_full_queue():
+    from repro.embed_serve import MicroBatcher
+
+    release = threading.Event()
+
+    def gated_serve(q):
+        release.wait(5.0)
+        return np.zeros((q.shape[0], 1), np.float32), \
+            np.zeros((q.shape[0], 1), np.int32)
+
+    b = MicroBatcher(gated_serve, dim=2, max_batch=1, window_ms=0.1,
+                     pad_multiple=1, queue_cap=1, shed_on_full=True)
+    try:
+        shed = served = 0
+        for _ in range(20):
+            try:
+                b.submit(np.zeros(2, np.float32))
+                served += 1
+            except Overloaded:
+                shed += 1
+        assert shed > 0                     # admission control actually shed
+        assert b.stats.shed == shed
+    finally:
+        release.set()
+        b.close()
+
+
+def test_batcher_attaches_degraded_meta():
+    from repro.embed_serve import MicroBatcher, TopKMeta
+
+    meta = TopKMeta(degraded=True, failed_shards=(0,), timeout_s=0.1)
+
+    def serve(q):
+        return (np.zeros((q.shape[0], 2), np.float32),
+                np.zeros((q.shape[0], 2), np.int32), meta)
+
+    with MicroBatcher(serve, dim=2, max_batch=4, window_ms=1.0,
+                      pad_multiple=1) as b:
+        out = b.submit(np.zeros(2, np.float32)).result(timeout=10.0)
+    assert len(out) == 3 and out[2] is meta
+    assert b.stats.degraded == 1
+
+
+# ---------------------------------------------------------------------------
+# Deadline unit behaviour
+# ---------------------------------------------------------------------------
+def test_deadline_wait_slice_is_bounded():
+    dl = Deadline(10.0, op="get", key=(0, 0))
+    assert 0.0 < dl.wait_s() <= 0.25
+    dl2 = Deadline(None, op="get", key=(0, 0))
+    assert dl2.wait_s() == 0.25
+
+
+def test_deadline_version_change_resets_clock():
+    dl = Deadline(0.2, op="get", key=(0, 0))
+    dl.check(0)
+    time.sleep(0.15)
+    dl.check(1)                              # progress: clock resets
+    time.sleep(0.15)
+    dl.check(2)
+    time.sleep(0.25)
+    with pytest.raises(StoreStalled):
+        dl.check(2)                          # no progress past the deadline
