@@ -115,6 +115,13 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
                   walk.chunk / store.put fault point runs the full matcher
                   but no spec ever fires. Gates the idle overhead of the
                   fault-injection layer against the streamed row.
+    remote_walkers — the same consumer pipeline fed by TWO subprocess walk
+                  producers over the episode transport (framing + chunk
+                  assembly + ordered delivery), the paper's CPU-machines-
+                  feed-GPU-trainers deployment shape. The row records wire
+                  traffic (msgs/s, bytes, resend rate) for the timed epoch;
+                  the gate warns when transport-fed throughput falls more
+                  than 15% below the in-process streamed row.
 
     Both modes time epoch 2 (identical sample stream — the chunk
     decomposition and RNG keying are worker-count-invariant) with the same
@@ -294,7 +301,6 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
         store.drop_epoch(4)
     finally:
         clear_plan()
-    pipe.close()
     rows.append({
         "mode": "faults_idle", "impl": impl, "B": B, "d": d,
         "mesh": list(mesh_shape), "episodes": episodes,
@@ -307,6 +313,70 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
         "peak_resident_episodes": store.peak_resident,
         "fault_points_checked": (plan.count("walk.chunk")
                                  + plan.count("store.put")),
+    })
+
+    # ---- remote_walkers: same consumer pipeline, episodes produced by two
+    # subprocess producers over the transport (epochs 5 warm / 6 timed, the
+    # usual steady-state structure: both epochs are submitted up front so
+    # epoch 6 production starts the instant epoch 5 fully lands).
+    from repro.walk import RemoteWalkCoordinator
+    coord = RemoteWalkCoordinator(g, wcfg(1), store, num_producers=2,
+                                  heartbeat_s=0.5, lease_s=30.0,
+                                  mode="process")
+    coord.start()
+    try:
+        h5, h6 = coord.epoch_walker(), coord.epoch_walker()
+        h5.start_async(5)
+        h6.start_async(6)
+        for ep in range(episodes):                  # warm epoch (untimed)
+            pipe.prefetch_window(5, ep, episodes)
+            trainer.train_episode(pipe.get(5, ep))
+        h5.join()
+        store.drop_epoch(5)
+
+        st_before = coord.transport_stats()
+        t0 = time.perf_counter()
+        walk_wait_s = build_s = stage_s = train_s = 0.0
+        n_samples = dropped = 0
+        for ep in range(episodes):                  # timed steady-state epoch
+            pipe.prefetch_window(6, ep, episodes)
+            staged = pipe.get(6, ep)
+            times = pipe.pop_times(6, ep)
+            t = time.perf_counter()
+            trainer.train_episode(staged)
+            train_s += time.perf_counter() - t
+            walk_wait_s += times.get("walk_wait_s", 0.0)
+            build_s += times.get("build_s", 0.0)
+            stage_s += times.get("stage_s", 0.0)
+            n_samples += staged.num_samples
+            dropped += staged.dropped
+        wall_s = time.perf_counter() - t0
+        h6.join()
+        st_after = coord.transport_stats()
+        store.drop_epoch(6)
+    finally:
+        coord.close()
+    pipe.close()
+    msgs = ((st_after["frames_recv"] + st_after["frames_sent"])
+            - (st_before["frames_recv"] + st_before["frames_sent"]))
+    rows.append({
+        "mode": "remote_walkers", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": 2, "pipeline_depth": depth,
+        # walks run inside the producer subprocesses: no in-process walk
+        # seconds to report — walk_wait_s still measures what the consumer
+        # actually stalled on
+        "walk_s": 0.0, "walk_wait_s": walk_wait_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": store.peak_resident,
+        "transport_msgs_per_s": msgs / wall_s,
+        "transport_wire_bytes": (st_after["bytes_recv"]
+                                 - st_before["bytes_recv"]),
+        "transport_resend_rate": st_after["resend_rate"],
+        "transport_dup_chunks": st_after["dup_chunks"],
     })
     return rows
 
@@ -403,6 +473,15 @@ def main():
                 print(f"WARNING: idle fault layer costs >10% streamed "
                       f"throughput at B={B} d={d}: "
                       f"{by_mode['faults_idle']:.1f} < "
+                      f"{by_mode['streamed']:.1f}")
+            # transport gate: subprocess producers over the wire must hold
+            # within 15% of in-process streamed throughput (the protocol +
+            # assembly overhead budget; resends under chaos are separate)
+            if (by_mode.get("remote_walkers", 0)
+                    < 0.85 * by_mode.get("streamed", 0)):
+                print(f"WARNING: remote-walker transport costs >15% "
+                      f"streamed throughput at B={B} d={d}: "
+                      f"{by_mode['remote_walkers']:.1f} < "
                       f"{by_mode['streamed']:.1f}")
 
     run = {

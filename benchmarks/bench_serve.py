@@ -150,7 +150,7 @@ def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
         "batched_qps": requests / wall,
         "batched_p50_s": float(np.percentile(req_lat, 50)),
         "batched_p99_s": float(np.percentile(req_lat, 99)),
-        "batched_mean_batch": batcher.stats.mean_batch,
+        "batched_mean_batch": batcher.stats_snapshot().mean_batch,
     }
 
 

@@ -43,7 +43,9 @@ _CLOSE = object()
 @dataclasses.dataclass
 class BatcherStats:
     """Coalescing + overload counters. ``shed`` is bumped by submitter
-    threads (under the batcher's stats lock); the rest by the worker."""
+    threads, the rest by the worker — ALL under the batcher's stats lock,
+    and readers should take a consistent :meth:`MicroBatcher.stats_snapshot`
+    rather than reading fields off the live object mid-flight."""
 
     requests: int = 0
     batches: int = 0
@@ -92,7 +94,7 @@ class MicroBatcher:
         self._closed = False
         self._drained = False       # close() finished its cancel-drain
         self.stats = BatcherStats()
-        self._stats_mu = threading.Lock()   # guards the shed counter
+        self._stats_mu = threading.Lock()   # guards EVERY stats field
         self._thread = threading.Thread(target=self._worker,
                                         name="embed-serve-batcher",
                                         daemon=True)
@@ -153,6 +155,15 @@ class MicroBatcher:
                 break
             if item is not _CLOSE:
                 item[1].cancel()
+
+    def stats_snapshot(self) -> BatcherStats:
+        """A consistent copy of the counters. The live ``stats`` object is
+        written by the worker and submitter threads under ``_stats_mu``;
+        reading its fields individually can observe a torn update (e.g.
+        ``requests`` from batch N+1 with ``batches`` from batch N, skewing
+        ``mean_batch``). Readers take the snapshot instead."""
+        with self._stats_mu:
+            return dataclasses.replace(self.stats)
 
     def __enter__(self):
         return self
@@ -215,7 +226,8 @@ class MicroBatcher:
                     fut.set_exception(DeadlineExceeded(
                         f"request expired {now - dl:.3f}s past its "
                         f"deadline before serving"))
-                    self.stats.expired += 1
+                    with self._stats_mu:
+                        self.stats.expired += 1
                 continue
             if fut.set_running_or_notify_cancel():
                 live.append((q, fut))
@@ -240,11 +252,12 @@ class MicroBatcher:
         for i, (_, fut) in enumerate(live):
             row = (np.asarray(vals[i]), np.asarray(ids[i]))
             fut.set_result(row if meta is None else row + (meta,))
-        self.stats.requests += B
-        self.stats.batches += 1
-        self.stats.padded_rows += Bp - B
-        if meta is not None and getattr(meta, "degraded", False):
-            self.stats.degraded += len(live)
+        with self._stats_mu:
+            self.stats.requests += B
+            self.stats.batches += 1
+            self.stats.padded_rows += Bp - B
+            if meta is not None and getattr(meta, "degraded", False):
+                self.stats.degraded += len(live)
 
 
 def drive_open_loop(batcher: MicroBatcher, queries, *, qps: float = 0.0,

@@ -185,7 +185,7 @@ def main(argv=None):
     lat_ms = np.sort(np.asarray(lat)) * 1e3
     p50 = float(np.percentile(lat_ms, 50))
     p99 = float(np.percentile(lat_ms, 99))
-    st = batcher.stats
+    st = batcher.stats_snapshot()
     deg = (f" | DEGRADED {n_degraded}/{args.queries} req "
            f"(shards {failed} failed)" if failed else "")
     print(f"served {args.queries} requests in {wall:.3f}s "

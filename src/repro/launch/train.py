@@ -42,10 +42,11 @@ def train_embedding(args):
     from repro.core import eval as ev
     from repro.graph.csr import build_csr
     from repro.graph.generators import powerlaw_graph
-    from repro.runtime import FaultPlan, clear_plan, install_plan
+    from repro.runtime import (FaultPlan, StoreStalled, TransportError,
+                               clear_plan, install_plan)
     from repro.train.checkpoint import load_arrays
-    from repro.walk import (DiskSampleStore, MemorySampleStore, WalkConfig,
-                            WalkEngine)
+    from repro.walk import (DiskSampleStore, MemorySampleStore,
+                            RemoteWalkCoordinator, WalkConfig, WalkEngine)
 
     if args.graph:
         from repro.graph.io import load_edge_list
@@ -138,20 +139,75 @@ def train_embedding(args):
         install_plan(plan)
         print(f"fault plan: {args.inject}")
 
-    engine = WalkEngine(g, wcfg, store)
+    # walker factory: in-process threaded engine, or — with
+    # --remote-walkers N — subprocess producers shipping episode chunks over
+    # the checksummed socket transport (same RNG keys, bitwise-identical
+    # sample stream, and real parallelism outside the GIL)
+    coord = None
+    if args.remote_walkers > 0:
+        coord = RemoteWalkCoordinator(
+            g, wcfg, store, num_producers=args.remote_walkers,
+            heartbeat_s=args.heartbeat_s, lease_s=args.lease_s,
+            inject_specs=args.inject)
+        coord.start()
+        mk_walker = coord.epoch_walker
+        print(f"remote walkers: {args.remote_walkers} subprocess "
+              f"producer(s) @ {coord.server.address[0]}:"
+              f"{coord.server.address[1]} (heartbeat {args.heartbeat_s}s, "
+              f"lease {args.lease_s}s)")
+    else:
+        def mk_walker():
+            return WalkEngine(g, wcfg, store)
+
+    engine = mk_walker()
     engine.start_async(start_epoch)
     try:
-        _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store,
-                                pipe, test_e, neg_e,
+        _train_embedding_epochs(args, cfg, trainer, engine, store,
+                                pipe, test_e, neg_e, mk_walker=mk_walker,
                                 start_epoch=start_epoch,
                                 start_episode=start_episode)
+        if coord is not None:
+            st = coord.transport_stats()
+            print(f"transport: {st['frames_recv']} frames / "
+                  f"{st['bytes_recv']} bytes received, "
+                  f"{st['dup_chunks']} duplicate chunk(s) discarded")
+    except (StoreStalled, TransportError) as e:
+        # leave a machine-readable dump for CI artifact upload: what
+        # stalled, what was resident, and which hosts were (not) beating
+        _dump_diagnostics(args.out_dir, e, coord)
+        raise
     finally:
         # always drain the prefetch workers: an in-flight build racing
         # interpreter teardown (e.g. after a KeyboardInterrupt) can crash
         # inside numpy after module unload
         pipe.close()
+        if coord is not None:
+            coord.close()
         if plan is not None:
             clear_plan()
+
+
+def _dump_diagnostics(out_dir, err, coord):
+    """OUT_DIR/diagnostics.json: the stall/transport failure in machine-
+    readable form (CI uploads it as an artifact on chaos-leg failure)."""
+    import json
+    from repro.runtime import StoreStalled
+
+    diag = {"error": type(err).__name__, "message": str(err)}
+    if isinstance(err, StoreStalled):
+        diag.update({"op": err.op, "key": err.key,
+                     "resident": sorted(err.resident),
+                     "producer_alive": err.producer_alive,
+                     "producer_info": err.producer_info,
+                     "waited_s": err.waited_s})
+    if coord is not None:
+        diag["host_health"] = coord.server.health.snapshot()
+        diag["transport"] = coord.transport_stats()
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "diagnostics.json")
+    with open(path, "w") as f:
+        json.dump(diag, f, indent=2, default=str)
+    print(f"diagnostics -> {path}")
 
 
 def _write_resume(args, trainer, epoch, next_ep):
@@ -170,12 +226,12 @@ def _write_resume(args, trainer, epoch, next_ep):
     return path
 
 
-def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
-                            test_e, neg_e, *, start_epoch=0, start_episode=0):
+def _train_embedding_epochs(args, cfg, trainer, engine, store, pipe,
+                            test_e, neg_e, *, mk_walker,
+                            start_epoch=0, start_episode=0):
     from repro.core import eval as ev
     from repro.runtime import fault_point
     from repro.train.checkpoint import save_checkpoint
-    from repro.walk import WalkEngine
 
     auc = 0.0
     ckpt_every = max(0, args.ckpt_every)
@@ -204,7 +260,7 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
                 # moment this epoch's walker finishes (backpressure-paced)
                 if nxt is None and epoch + 1 < args.epochs and engine.finished():
                     engine.join()        # surfaces walker errors
-                    nxt = WalkEngine(g, wcfg, store)
+                    nxt = mk_walker()
                     nxt.start_async(epoch + 1)
                 if ckpt_every and (epoch * args.episodes + ep + 1) % ckpt_every == 0:
                     path = _write_resume(args, trainer, epoch, ep + 1)
@@ -220,7 +276,7 @@ def _train_embedding_epochs(args, cfg, trainer, engine, g, wcfg, store, pipe,
             raise
         engine.join()
         if nxt is None and epoch + 1 < args.epochs:
-            nxt = WalkEngine(g, wcfg, store)
+            nxt = mk_walker()
             nxt.start_async(epoch + 1)
         store.drop_epoch(epoch)
         V = trainer.embeddings()
@@ -356,6 +412,19 @@ def main(argv=None):
     ap.add_argument("--walk-workers", type=int, default=2,
                     help="walk-engine chunk worker threads (1 = inline; the "
                          "sample stream is identical for any value)")
+    ap.add_argument("--remote-walkers", type=int, default=0,
+                    help="run N walk producers as subprocesses shipping "
+                         "episode chunks over the checksummed socket "
+                         "transport (0 = in-process threads). The sample "
+                         "stream is bitwise-identical either way; "
+                         "subprocesses walk outside the GIL and survive "
+                         "producer crashes via lease-based reassignment")
+    ap.add_argument("--heartbeat-s", type=float, default=1.0,
+                    help="remote producer heartbeat interval")
+    ap.add_argument("--lease-s", type=float, default=10.0,
+                    help="seconds without a heartbeat before a remote "
+                         "producer is declared dead and its unfinished "
+                         "episodes are reassigned to survivors")
     ap.add_argument("--pipeline-depth", type=int, default=2,
                     help="episodes in flight through the fetch/build/stage "
                          "pipeline")

@@ -22,21 +22,30 @@ serve path consults:
 * :mod:`repro.runtime.watchdog` — ``Deadline`` helpers replacing silent
   infinite condition-variable waits with diagnostics-carrying
   ``StoreStalled`` failures.
+* :mod:`repro.runtime.transport` — the process-boundary layer: length-
+  prefixed checksummed message framing (``FramedSocket``) with the
+  ``net.*`` fault sites in the send path, exactly-once chunk assembly
+  keyed by ``(seed, epoch, episode, chunk)`` (``ChunkAssembler``), and the
+  heartbeat/lease host registry (``HostHealth``) that lets stall
+  diagnostics name the dead machine.
 * :mod:`repro.runtime.errors` — the shared failure vocabulary
-  (``InjectedFault``, ``StoreStalled``, ``CorruptEpisodeError``,
-  ``DeadlineExceeded``, ``Overloaded``).
+  (``InjectedFault``, ``StoreStalled``, ``TransportError``,
+  ``CorruptEpisodeError``, ``DeadlineExceeded``, ``Overloaded``).
 """
 from repro.runtime.errors import (CorruptEpisodeError, DeadlineExceeded,
-                                  InjectedFault, Overloaded, StoreStalled)
+                                  InjectedFault, Overloaded, StoreStalled,
+                                  TransportError)
 from repro.runtime.faults import (FaultPlan, FaultSpec, active_plan,
                                   clear_plan, fault_point, inject,
                                   install_plan)
 from repro.runtime.retry import RetryPolicy, call_with_retry
+from repro.runtime.transport import ChunkAssembler, FramedSocket, HostHealth
 from repro.runtime.watchdog import Deadline
 
 __all__ = [
-    "CorruptEpisodeError", "Deadline", "DeadlineExceeded", "FaultPlan",
-    "FaultSpec", "InjectedFault", "Overloaded", "RetryPolicy",
-    "StoreStalled", "active_plan", "call_with_retry", "clear_plan",
-    "fault_point", "inject", "install_plan",
+    "ChunkAssembler", "CorruptEpisodeError", "Deadline", "DeadlineExceeded",
+    "FaultPlan", "FaultSpec", "FramedSocket", "HostHealth", "InjectedFault",
+    "Overloaded", "RetryPolicy", "StoreStalled", "TransportError",
+    "active_plan", "call_with_retry", "clear_plan", "fault_point", "inject",
+    "install_plan",
 ]

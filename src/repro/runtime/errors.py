@@ -31,18 +31,27 @@ class StoreStalled(RuntimeError):
     time, and whether the producer looked alive."""
 
     def __init__(self, op: str, key, *, resident, producer_alive,
-                 waited_s: float):
+                 waited_s: float, producer_info: str | None = None):
         self.op = op
         self.key = key
         self.resident = tuple(resident)
         self.producer_alive = producer_alive
+        self.producer_info = producer_info
         self.waited_s = waited_s
         alive = ("unknown" if producer_alive is None
                  else "alive" if producer_alive else "DEAD")
         super().__init__(
             f"sample store stalled in {op} waiting on {key!r} "
             f"({waited_s:.1f}s without progress); resident episodes: "
-            f"{sorted(self.resident)!r}; producer: {alive}")
+            f"{sorted(self.resident)!r}; producer: {alive}"
+            + (f" [{producer_info}]" if producer_info else ""))
+
+
+class TransportError(RuntimeError):
+    """A transport-level failure: torn/corrupt frame, injected disconnect,
+    ack timeout, or a peer that vanished mid-conversation. Retriable by
+    reconnect-and-resend — the idempotence keys on every episode chunk make
+    redelivery exactly-once at the store."""
 
 
 class CorruptEpisodeError(RuntimeError):

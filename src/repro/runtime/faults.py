@@ -23,9 +23,13 @@ dataflow row in ``BENCH_episode.json``).
 Spec string grammar (the CLI's ``--inject`` and ``FaultSpec.parse``)::
 
     site:kind[:opt=val]...
-    kinds:  crash | delay | corrupt
+    kinds:  crash | delay | corrupt | fire
     opts:   at=N           fire on the N-th invocation of site (0-based)
-            key=a/b/c      fire only when the invocation key == (a, b, c)
+            key=a/b/c      fire only when the invocation key == (a, b, c);
+                           a trailing "/*" prefix-matches instead, e.g.
+                           key=walker-0/* fires on that host's first
+                           matching invocation whatever the rest of the key
+                           (racy assignments stay killable deterministically)
             times=N|inf    firings before the spec is spent (default 1)
             delay=SECONDS  sleep length for kind=delay (default 0.05)
 
@@ -33,6 +37,15 @@ Spec string grammar (the CLI's ``--inject`` and ``FaultSpec.parse``)::
     train.episode:crash:key=6/1    die right before training episode (6, 1)
     serve.shard:delay:key=1:delay=0.5:times=inf   shard 1 is always slow
     disk.write:corrupt:at=0        corrupt the first episode file written
+    net.drop:fire:at=2             the 3rd frame sent vanishes on the wire
+    net.disconnect:fire:at=5       the transport closes mid-conversation
+
+``corrupt`` and ``fire`` are mechanically identical — the fault point
+returns True and the CALLER implements the behaviour. ``corrupt`` names the
+torn-output sites; ``fire`` is the generic signal used by sites whose
+behaviour isn't a corruption (the ``net.*`` transport sites: the transport
+drops / duplicates / reorders the frame or closes the socket when its site
+fires — see ``repro.runtime.transport``).
 """
 from __future__ import annotations
 
@@ -43,12 +56,17 @@ import time
 
 from repro.runtime.errors import InjectedFault
 
-KINDS = ("crash", "delay", "corrupt")
+KINDS = ("crash", "delay", "corrupt", "fire")
 
 #: canonical site names (informative, not enforced — new subsystems add
-#: sites freely; tests use ad-hoc names)
+#: sites freely; tests use ad-hoc names). The ``net.*`` sites live inside
+#: the episode transport's send path (keyed by the frame's message key);
+#: ``producer.episode`` fires at the top of a remote producer's episode
+#: loop, keyed by (host, epoch, episode) so a chaos plan can kill one
+#: specific producer host.
 SITES = ("walk.chunk", "store.put", "disk.write", "train.episode",
-         "serve.shard")
+         "serve.shard", "net.drop", "net.delay", "net.duplicate",
+         "net.reorder", "net.disconnect", "producer.episode")
 
 
 def _key_str(key) -> str | None:
@@ -108,8 +126,12 @@ class FaultSpec:
             return False
         if self.at is not None and ordinal != self.at:
             return False
-        if self.key is not None and key_s != self.key:
-            return False
+        if self.key is not None:
+            if self.key.endswith("/*"):
+                if key_s is None or not key_s.startswith(self.key[:-1]):
+                    return False
+            elif key_s != self.key:
+                return False
         return True
 
 
@@ -139,7 +161,8 @@ class FaultPlan:
 
     def check(self, site: str, key=None) -> bool:
         """Advance ``site``'s counter; fire matching specs. Returns True if
-        a ``corrupt`` spec fired; raises/sleeps for crash/delay."""
+        a ``corrupt`` or ``fire`` spec fired; raises/sleeps for
+        crash/delay."""
         key_s = _key_str(key)
         with self._mu:
             n = self._counts.get(site, 0)
@@ -154,7 +177,7 @@ class FaultPlan:
         for s in todo:                     # outside the lock: may sleep/raise
             if s.kind == "delay":
                 time.sleep(s.delay_s)
-            elif s.kind == "corrupt":
+            elif s.kind in ("corrupt", "fire"):
                 corrupt = True
             else:
                 raise InjectedFault(site, key)
@@ -181,8 +204,9 @@ def active_plan() -> FaultPlan | None:
 
 def fault_point(site: str, key=None) -> bool:
     """Declare a fault site. No plan installed → immediate False (the
-    no-op hot path). Returns True when a ``corrupt`` spec fired; a
-    ``crash`` spec raises :class:`InjectedFault`; ``delay`` sleeps."""
+    no-op hot path). Returns True when a ``corrupt`` or ``fire`` spec
+    fired; a ``crash`` spec raises :class:`InjectedFault`; ``delay``
+    sleeps."""
     plan = _PLAN
     if plan is None:
         return False

@@ -32,19 +32,26 @@ class Deadline:
         (None = no overall deadline; producer liveness still applies).
     op : description of the blocked operation ("get"/"put"/"episodes").
     key : the (epoch, episode) — or epoch — being waited on.
-    producer : optional zero-arg liveness probe (e.g. ``WalkEngine.alive``);
-        a False return while the waited-for work is still possible raises
-        immediately — no point waiting out the deadline on a corpse.
+    producer : optional zero-arg liveness probe (e.g. ``WalkEngine.alive``
+        or ``HostHealth.any_alive`` for remote producers); a False return
+        while the waited-for work is still possible raises immediately — no
+        point waiting out the deadline on a corpse.
+    producer_info : optional zero-arg callable returning a human-readable
+        producer description (e.g. ``HostHealth.describe``, naming which
+        HOSTS are alive/dead and how stale their leases are) — attached to
+        the ``StoreStalled`` so the diagnostic names the dead machine, not
+        just "producer: DEAD".
     resident : zero-arg callable returning the store's resident keys, for
         the diagnostic.
     """
 
     def __init__(self, timeout_s: float | None, *, op: str, key,
-                 producer=None, resident=lambda: ()):
+                 producer=None, producer_info=None, resident=lambda: ()):
         self.timeout_s = timeout_s
         self.op = op
         self.key = key
         self.producer = producer
+        self.producer_info = producer_info
         self.resident = resident
         self._t_progress = time.monotonic()
         self._version = None
@@ -77,9 +84,19 @@ class Deadline:
                 raise StoreStalled(self.op, self.key,
                                    resident=self.resident(),
                                    producer_alive=False,
+                                   producer_info=self._info(),
                                    waited_s=now - self._t_progress)
         if (self.timeout_s is not None
                 and now - self._t_progress >= self.timeout_s):
             raise StoreStalled(self.op, self.key, resident=self.resident(),
                                producer_alive=alive,
+                               producer_info=self._info(),
                                waited_s=now - self._t_progress)
+
+    def _info(self) -> str | None:
+        if self.producer_info is None:
+            return None
+        try:
+            return str(self.producer_info())
+        except Exception as e:  # noqa: BLE001 — diagnostics must not mask
+            return f"producer_info failed: {e!r}"

@@ -1,9 +1,12 @@
 from repro.walk.alias import AliasTable
 from repro.walk.engine import WalkEngine, WalkConfig
 from repro.walk.augment import walks_to_pairs
+from repro.walk.remote import (RemoteEpisodeServer, RemoteProducer,
+                               RemoteWalkCoordinator)
 from repro.walk.store import SampleStore, MemorySampleStore, DiskSampleStore
 
 __all__ = [
     "AliasTable", "WalkEngine", "WalkConfig", "walks_to_pairs",
+    "RemoteEpisodeServer", "RemoteProducer", "RemoteWalkCoordinator",
     "SampleStore", "MemorySampleStore", "DiskSampleStore",
 ]

@@ -81,7 +81,12 @@ class WalkEngine:
     ``_errors`` queue and re-raise in ``join``.
     """
 
-    def __init__(self, graph: CSRGraph, config: WalkConfig, store: SampleStore):
+    def __init__(self, graph: CSRGraph, config: WalkConfig,
+                 store: SampleStore | None = None):
+        # store=None is the producer-side mode: a remote walk producer uses
+        # only the store-free generation surface (episode_chunk_stream /
+        # episode_pairs) and ships chunks over the transport instead of
+        # putting them locally. run_epoch/start_async require a store.
         self.graph = graph
         self.config = config
         self.store = store
@@ -242,6 +247,22 @@ class WalkEngine:
             raise
         pool.shutdown(wait=True)
         self.store.finish_epoch(epoch)
+
+    def num_episodes(self) -> int:
+        return self.config.episodes
+
+    def episode_chunk_stream(self, epoch: int, episode: int):
+        """Yield ``(chunk_index, num_chunks, pairs)`` for one episode.
+
+        The remote producer's unit of shipment: the SAME chunk decomposition
+        and ``(seed, epoch, episode, chunk)`` RNG keys as ``run_epoch`` /
+        ``episode_pairs``, so chunks shipped over the transport and
+        assembled in chunk order are bitwise-identical to in-process
+        production — and any producer can replay any episode."""
+        starts = self._episode_starts(epoch)[episode]
+        chunks = self._episode_chunks(starts)
+        for c, s in enumerate(chunks):
+            yield c, len(chunks), self._chunk_retrying(epoch, episode, c, s)
 
     def episode_pairs(self, epoch: int, episode: int) -> np.ndarray:
         """Regenerate one episode's pairs directly (no store interaction).

@@ -1,0 +1,616 @@
+"""Remote walk producers: episode chunks over the fault-tolerant transport.
+
+The paper runs walk generation on dedicated CPU machines and training on a
+GPU cluster; this module crosses that boundary. Three roles:
+
+* :class:`RemoteEpisodeServer` — trainer-side. Listens on a socket, hands
+  out episode assignments from a lock-server-free work queue (the
+  PyTorch-BigGraph shape: any producer can run any episode because the
+  ``(seed, epoch, episode, chunk)`` RNG keying makes episodes
+  location-independent), assembles arriving chunks exactly-once through a
+  :class:`~repro.runtime.transport.ChunkAssembler`, and delivers completed
+  episodes into the bounded :class:`~repro.walk.store.SampleStore` in
+  episode order — matching the in-process ``WalkEngine.run_epoch`` put
+  order exactly, so the trainer cannot tell the difference (test-gated
+  bitwise). A :class:`~repro.runtime.transport.HostHealth` lease registry
+  tracks producer heartbeats; an expired host's in-flight episodes are
+  reclaimed and reassigned to survivors.
+* :class:`RemoteProducer` — walker-side. Connects, asks for work, streams
+  each assigned episode's chunks (pipelined, then drains acks), and on ANY
+  transport failure — torn frame, injected ``net.disconnect``, ack timeout
+  after a ``net.drop`` — reconnects and resends everything unacked.
+  Redelivery is exactly-once at the server by the idempotence key, so the
+  producer's recovery rule is maximally dumb: when in doubt, resend.
+* :class:`RemoteWalkCoordinator` — the launcher's facade. Spawns N
+  producers (subprocesses via multiprocessing ``spawn`` — real parallelism,
+  sidestepping the GIL-bound in-process walker pool — or threads for
+  tests), owns the server, and exposes ``epoch_walker()`` handles that
+  mimic the ``WalkEngine`` async surface (``start_async``/``finished``/
+  ``alive``/``join``) so ``launch.train`` swaps producers with one factory.
+
+Fault sites: every CHUNK frame send runs the ``net.*`` sites keyed
+``(epoch, episode, chunk)`` — control traffic (hello/heartbeat/work/acks)
+is deliberately uninstrumented so ordinal-based specs target the
+deterministic chunk stream, not timing-dependent polling.
+``producer.episode`` fires at the top of each assigned episode, keyed
+``(host, epoch, episode)``, so a chaos plan can kill one specific host.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+import multiprocessing as mp
+import socket
+import threading
+import time
+
+from repro.runtime import FaultPlan, fault_point, install_plan
+from repro.runtime.errors import InjectedFault, TransportError
+from repro.runtime.transport import (ChunkAssembler, FramedSocket, HostHealth,
+                                     decode_pairs, encode_pairs)
+from repro.walk.engine import WalkConfig, WalkEngine
+
+#: producer poll interval while the server has no assignable episode
+WAIT_POLL_S = 0.05
+
+
+def _connect(address, *, timeout_s: float = 30.0) -> socket.socket:
+    """Connect with retry: the producers race the server's listen()."""
+    deadline = time.monotonic() + timeout_s
+    while True:
+        try:
+            s = socket.create_connection(address, timeout=5.0)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return s
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.05)
+
+
+class RemoteEpisodeServer:
+    """Work-queue + chunk-assembly server feeding one :class:`SampleStore`.
+
+    Epochs are produced strictly sequentially (``submit_epoch`` queues;
+    the next activates when the current fully lands), mirroring the
+    launcher's one-producing-epoch-at-a-time overlap. Within an epoch the
+    assignment window bounds run-ahead: an episode is handed out only while
+    ``episode - next_put < window``, so completed-but-unput episodes held
+    for ordered delivery stay O(window), and the store's own ``depth``
+    backpressure (applied in the dedicated put thread) paces everything
+    upstream of it.
+    """
+
+    def __init__(self, store, num_episodes: int, seed: int, *,
+                 lease_s: float = 10.0, window: int | None = None):
+        self.store = store
+        self.num_episodes = num_episodes
+        self.seed = seed
+        self.health = HostHealth(lease_s)
+        self.assembler = ChunkAssembler()
+        depth = getattr(store, "depth", None)
+        self.window = window or max(2, (depth or 2) + 1)
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self._epoch: int | None = None
+        self._epoch_queue: collections.deque[int] = collections.deque()
+        self._pending: collections.deque[int] = collections.deque()
+        self._assigned: dict[int, str] = {}
+        self._ready: list = []                 # heap of (episode, pairs)
+        self._next_put = 0
+        self._finished_epochs: set[int] = set()
+        self._error: BaseException | None = None
+        self._shutdown = False
+        self._stop_evt = threading.Event()
+        self._conns: list[FramedSocket] = []
+        self._closed_stats = {"frames_recv": 0, "bytes_recv": 0,
+                              "frames_sent": 0, "bytes_sent": 0}
+        self._threads: list[threading.Thread] = []
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind(("127.0.0.1", 0))
+        self._lsock.listen(64)
+        # timeout-polling accept: closing a listener does not reliably wake
+        # a thread blocked in accept(), so poll with a short timeout and
+        # check the stop event between attempts
+        self._lsock.settimeout(0.25)
+        self.address = self._lsock.getsockname()
+
+    # ---------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for target, name in ((self._accept_loop, "rws-accept"),
+                             (self._put_loop, "rws-put"),
+                             (self._reclaim_loop, "rws-reclaim")):
+            t = threading.Thread(target=target, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop_work(self) -> None:
+        """Stop handing out assignments: subsequent ``work`` requests get
+        ``done``, so producers drain and exit cleanly while the sockets
+        stay open. Call before :meth:`close`."""
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        self._stop_evt.set()
+
+    def close(self) -> None:
+        self.stop_work()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        with self._mu:
+            conns = list(self._conns)
+        for c in conns:
+            c.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # ------------------------------------------------------------------ epochs
+    def submit_epoch(self, epoch: int) -> None:
+        with self._cv:
+            if self._error is not None:
+                raise self._error
+            if self._epoch is None:
+                self._activate_locked(epoch)
+            else:
+                self._epoch_queue.append(epoch)
+            self._cv.notify_all()
+
+    def _activate_locked(self, epoch: int) -> None:
+        self._epoch = epoch
+        self._pending = collections.deque(range(self.num_episodes))
+        self._assigned = {}
+        self._ready = []
+        self._next_put = 0
+
+    def epoch_finished(self, epoch: int) -> bool:
+        with self._mu:
+            return epoch in self._finished_epochs
+
+    def wait_epoch(self, epoch: int, timeout_s: float | None = None) -> None:
+        """Block until ``epoch`` has fully landed in the store; re-raise the
+        recorded production error, if any — the facade's ``join``."""
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        with self._cv:
+            while (epoch not in self._finished_epochs
+                   and self._error is None):
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(f"epoch {epoch} not produced in time")
+                self._cv.wait(timeout=0.25)
+            if self._error is not None:
+                raise self._error
+
+    def _fail(self, err: BaseException) -> None:
+        """Record a terminal production error and fail consumers fast —
+        the remote mirror of ``WalkEngine.start_async``'s error path."""
+        with self._cv:
+            if self._error is None:
+                self._error = err
+            epoch = self._epoch
+            self._cv.notify_all()
+        if epoch is not None:
+            self.store.finish_epoch(epoch)
+
+    # --------------------------------------------------------------- put thread
+    def _put_loop(self) -> None:
+        try:
+            while True:
+                with self._cv:
+                    while not (self._shutdown
+                               or (self._epoch is not None and self._ready
+                                   and self._ready[0][0] == self._next_put)):
+                        self._cv.wait(timeout=0.25)
+                    if self._shutdown:
+                        return
+                    epoch = self._epoch
+                    ep, pairs = heapq.heappop(self._ready)
+                # store.put may block on backpressure — outside the lock so
+                # chunk handlers / assignment keep running meanwhile
+                self.store.put_unique(epoch, ep, pairs)
+                with self._cv:
+                    self._next_put += 1
+                    done = self._next_put >= self.num_episodes
+                    if done:
+                        self._finished_epochs.add(epoch)
+                        self._epoch = None
+                        if self._epoch_queue:
+                            self._activate_locked(self._epoch_queue.popleft())
+                    self._cv.notify_all()
+                if done:
+                    self.store.finish_epoch(epoch)
+        except BaseException as e:  # noqa: BLE001 — any put failure is terminal
+            self._fail(e)
+
+    # ----------------------------------------------------------- reclaim thread
+    def _reclaim_loop(self) -> None:
+        poll = max(0.1, self.health.lease_s / 4)
+        while True:
+            if self._stop_evt.wait(timeout=poll):
+                return
+            for host in self.health.expired():
+                self.health.mark_dead(host)
+                with self._cv:
+                    lost = sorted(ep for ep, h in self._assigned.items()
+                                  if h == host)
+                    for ep in reversed(lost):
+                        del self._assigned[ep]
+                        self._pending.appendleft(ep)
+                    self._cv.notify_all()
+                if lost:
+                    print(f"remote-walk: host {host!r} lease expired; "
+                          f"reassigning episodes {lost} to survivors")
+            with self._cv:
+                epoch_active = self._epoch is not None
+            if epoch_active and self.health.hosts() \
+                    and not self.health.any_alive():
+                self._fail(TransportError(
+                    "all remote producer hosts are dead "
+                    f"[{self.health.describe()}]"))
+                return
+
+    # ------------------------------------------------------------- connections
+    def _accept_loop(self) -> None:
+        while not self._stop_evt.is_set():
+            try:
+                s, _ = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return                          # listener closed: shutting down
+            s.settimeout(None)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = FramedSocket(s)
+            with self._mu:
+                self._conns.append(conn)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 name="rws-conn", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: FramedSocket) -> None:
+        try:
+            while True:
+                msg, body = conn.recv()
+                reply = self._dispatch(msg, body)
+                if reply is None:               # bye
+                    break
+                conn.send(reply)
+        except (TransportError, ConnectionError, OSError):
+            pass                                # producer will reconnect
+        finally:
+            with self._mu:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+                st = conn.stats()
+                for k in self._closed_stats:
+                    self._closed_stats[k] += st.get(k, 0)
+            conn.close()
+
+    def _dispatch(self, msg: dict, body: bytes) -> dict | None:
+        t = msg.get("t")
+        host = msg.get("host", "?")
+        self.health.beat(host)
+        if t in ("hello", "hb"):
+            return {"t": "ok", "seed": self.seed}
+        if t == "bye":
+            return None
+        if t == "work":
+            return self._assign(host)
+        if t == "chunk":
+            return self._chunk(msg, body)
+        raise TransportError(f"unknown message type {t!r}")
+
+    def _assign(self, host: str) -> dict:
+        with self._cv:
+            if self._shutdown or self._error is not None:
+                return {"t": "done"}
+            if (self._epoch is not None and self._pending
+                    and self._pending[0] - self._next_put < self.window):
+                ep = self._pending.popleft()
+                self._assigned[ep] = host
+                return {"t": "assign", "epoch": self._epoch, "episode": ep}
+            return {"t": "wait", "poll_s": WAIT_POLL_S}
+
+    def _chunk(self, msg: dict, body: bytes) -> dict:
+        epoch, ep = msg["epoch"], msg["episode"]
+        if msg["seed"] != self.seed:
+            raise TransportError(
+                f"producer seed {msg['seed']} != server seed {self.seed}")
+        dup, assembled = self.assembler.add(
+            msg["seed"], epoch, ep, msg["chunk"], msg["nchunks"],
+            decode_pairs(msg, body))
+        complete = assembled is not None
+        if complete:
+            with self._cv:
+                if epoch == self._epoch and ep >= self._next_put:
+                    heapq.heappush(self._ready, (ep, assembled))
+                    self._assigned.pop(ep, None)
+                    self._cv.notify_all()
+        return {"t": "ack", "epoch": epoch, "episode": ep,
+                "chunk": msg["chunk"], "dup": dup, "complete": complete}
+
+    # ------------------------------------------------------------------- stats
+    def transport_stats(self) -> dict:
+        with self._mu:
+            agg = dict(self._closed_stats)
+            for c in self._conns:
+                st = c.stats()
+                for k in agg:
+                    agg[k] += st.get(k, 0)
+        agg["dup_chunks"] = self.assembler.dup_chunks
+        agg["chunks_applied"] = self.assembler.chunks_applied
+        applied = max(1, agg["chunks_applied"])
+        agg["resend_rate"] = agg["dup_chunks"] / applied
+        return agg
+
+
+class RemoteProducer:
+    """One walk-producer host: ask for work, walk it, ship it, survive.
+
+    Runs the store-free :class:`WalkEngine` generation surface
+    (``episode_chunk_stream``) so its chunks carry exactly the RNG keys the
+    in-process engine would use. All chunks of an assigned episode are
+    pipelined onto the wire, then their acks drained; any transport failure
+    (including an ack timeout after an injected ``net.drop``) triggers
+    reconnect-and-resend of the unacked remainder.
+    """
+
+    def __init__(self, address, host: str, graph, wcfg: WalkConfig, *,
+                 heartbeat_s: float = 1.0, ack_timeout_s: float = 10.0,
+                 connect_timeout_s: float = 30.0):
+        self.address = tuple(address)
+        self.host = host
+        self.engine = WalkEngine(graph, wcfg)
+        self.wcfg = wcfg
+        self.heartbeat_s = heartbeat_s
+        self.ack_timeout_s = ack_timeout_s
+        self.connect_timeout_s = connect_timeout_s
+        self._conn: FramedSocket | None = None
+        self.reconnects = 0
+        self.chunks_resent = 0
+
+    # -------------------------------------------------------------- connection
+    def _connection(self) -> FramedSocket:
+        if self._conn is None:
+            s = _connect(self.address, timeout_s=self.connect_timeout_s)
+            s.settimeout(self.ack_timeout_s)
+            conn = FramedSocket(s)
+            conn.send({"t": "hello", "host": self.host})
+            conn.recv()
+            self._conn = conn
+        return self._conn
+
+    def _drop_connection(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+            self.reconnects += 1
+
+    # -------------------------------------------------------------- heartbeats
+    def _heartbeat_loop(self, stop: threading.Event) -> None:
+        # dedicated connection: a long GIL-heavy walk on the work connection
+        # must not starve the lease — heartbeats ride their own socket and
+        # are never fault-injected
+        conn = None
+        while not stop.is_set():
+            try:
+                if conn is None:
+                    s = _connect(self.address,
+                                 timeout_s=self.connect_timeout_s)
+                    s.settimeout(self.ack_timeout_s)
+                    conn = FramedSocket(s)
+                conn.send({"t": "hb", "host": self.host})
+                conn.recv()
+            except (TransportError, ConnectionError, OSError):
+                if conn is not None:
+                    conn.close()
+                conn = None
+            stop.wait(self.heartbeat_s)
+        if conn is not None:
+            conn.close()
+
+    # -------------------------------------------------------------- work loop
+    def run(self) -> None:
+        stop = threading.Event()
+        hb = threading.Thread(target=self._heartbeat_loop, args=(stop,),
+                              name=f"hb-{self.host}", daemon=True)
+        hb.start()
+        try:
+            failures = 0
+            while True:
+                try:
+                    conn = self._connection()
+                    conn.send({"t": "work", "host": self.host})
+                    reply, _ = conn.recv()
+                    # a duplicated final chunk can leave one stray ack in
+                    # flight after the drain loop already saw the episode
+                    # fully acked — skip past it
+                    while reply.get("t") == "ack":
+                        reply, _ = conn.recv()
+                    failures = 0
+                except (TransportError, ConnectionError, OSError):
+                    self._drop_connection()
+                    failures += 1
+                    if failures >= 3:
+                        break      # server is gone: nothing left to produce
+                    time.sleep(WAIT_POLL_S)
+                    continue
+                t = reply.get("t")
+                if t == "done":
+                    break
+                if t == "wait":
+                    time.sleep(reply.get("poll_s", WAIT_POLL_S))
+                    continue
+                epoch, episode = reply["epoch"], reply["episode"]
+                fault_point("producer.episode", (self.host, epoch, episode))
+                self._ship_episode(epoch, episode)
+        finally:
+            stop.set()
+            hb.join(timeout=5.0)
+            if self._conn is not None:
+                try:
+                    self._conn.send({"t": "bye", "host": self.host})
+                except (TransportError, ConnectionError, OSError):
+                    pass
+                self._conn.close()
+                self._conn = None
+
+    def _ship_episode(self, epoch: int, episode: int) -> None:
+        chunks = list(self.engine.episode_chunk_stream(epoch, episode))
+        acked: set[int] = set()
+        attempts = 0
+        while len(acked) < len(chunks):
+            attempts += 1
+            if attempts > 10:
+                raise TransportError(
+                    f"episode ({epoch}, {episode}): gave up after "
+                    f"{attempts - 1} transport attempts")
+            if attempts > 1:
+                self.chunks_resent += len(chunks) - len(acked)
+            try:
+                conn = self._connection()
+                for c, n, pairs in chunks:
+                    if c in acked:
+                        continue
+                    meta, body = encode_pairs(pairs)
+                    conn.send({"t": "chunk", "host": self.host,
+                               "seed": self.wcfg.seed, "epoch": epoch,
+                               "episode": episode, "chunk": c, "nchunks": n,
+                               **meta},
+                              body, key=(epoch, episode, c), inject=True)
+                # drain until every chunk is acked — set-idempotent, so a
+                # duplicated frame's double ack is absorbed rather than
+                # desynchronizing the reply stream; a dropped frame's
+                # missing ack surfaces as a recv timeout below
+                while len(acked) < len(chunks):
+                    reply, _ = conn.recv()
+                    if reply.get("t") != "ack":
+                        raise TransportError(
+                            f"expected ack, got {reply.get('t')!r}")
+                    acked.add(reply["chunk"])
+            except (TransportError, ConnectionError, OSError):
+                # includes socket timeouts waiting on the ack of a dropped
+                # frame: reconnect and resend whatever is unacked — the
+                # server's idempotence keys discard anything that DID land
+                self._drop_connection()
+
+
+def _producer_main(address, host, graph, wcfg, inject_specs, heartbeat_s):
+    """Subprocess entry (multiprocessing ``spawn``): fresh interpreter, own
+    fault-plan counters, no jax import anywhere on this path."""
+    if inject_specs:
+        install_plan(FaultPlan(inject_specs))
+    RemoteProducer(address, host, graph, wcfg,
+                   heartbeat_s=heartbeat_s).run()
+
+
+class _EpochHandle:
+    """One epoch's walker, shaped like the ``WalkEngine`` async surface."""
+
+    def __init__(self, coord: "RemoteWalkCoordinator"):
+        self._coord = coord
+        self._epoch: int | None = None
+
+    def start_async(self, epoch: int) -> None:
+        self._epoch = epoch
+        self._coord.server.submit_epoch(epoch)
+
+    def finished(self) -> bool:
+        return (self._epoch is None
+                or self._coord.server.epoch_finished(self._epoch)
+                or self._coord.server._error is not None)
+
+    def alive(self) -> bool:
+        return self._coord.alive()
+
+    def join(self) -> None:
+        if self._epoch is not None:
+            self._coord.server.wait_epoch(self._epoch)
+
+
+class RemoteWalkCoordinator:
+    """Owns the server plus N producers; hands ``launch.train`` walker
+    handles indistinguishable from ``WalkEngine``.
+
+    ``mode="process"`` spawns real subprocess producers (the GIL-free
+    path); ``mode="thread"`` runs them as in-process threads — same
+    protocol, same sockets, cheap enough for tests.
+    """
+
+    def __init__(self, graph, wcfg: WalkConfig, store, *,
+                 num_producers: int = 2, heartbeat_s: float = 1.0,
+                 lease_s: float = 10.0, mode: str = "process",
+                 ack_timeout_s: float = 10.0, inject_specs=()):
+        self.graph = graph
+        self.wcfg = wcfg
+        self.store = store
+        self.num_producers = max(1, num_producers)
+        self.heartbeat_s = heartbeat_s
+        self.ack_timeout_s = ack_timeout_s
+        self.mode = mode
+        self.inject_specs = list(inject_specs)
+        self.server = RemoteEpisodeServer(store, wcfg.episodes, wcfg.seed,
+                                          lease_s=lease_s)
+        self._procs: list = []
+
+    def start(self) -> None:
+        self.server.start()
+        set_producer = getattr(self.store, "set_producer", None)
+        if callable(set_producer):
+            set_producer(self.alive, self.server.health.describe)
+        for i in range(self.num_producers):
+            host = f"walker-{i}"
+            if self.mode == "process":
+                ctx = mp.get_context("spawn")
+                p = ctx.Process(
+                    target=_producer_main,
+                    args=(self.server.address, host, self.graph, self.wcfg,
+                          self.inject_specs, self.heartbeat_s),
+                    name=host, daemon=True)
+                p.start()
+            else:
+                prod = RemoteProducer(self.server.address, host, self.graph,
+                                      self.wcfg, heartbeat_s=self.heartbeat_s,
+                                      ack_timeout_s=self.ack_timeout_s)
+
+                def _run(prod=prod):
+                    # An injected crash simulates a SIGKILL'd producer
+                    # process: the thread must die silently (liveness is
+                    # detected via the lease, not the exception). Any
+                    # other exception still escapes to the caller.
+                    try:
+                        prod.run()
+                    except InjectedFault:
+                        pass
+
+                p = threading.Thread(target=_run, name=host, daemon=True)
+                p.start()
+            self._procs.append(p)
+
+    def epoch_walker(self) -> _EpochHandle:
+        return _EpochHandle(self)
+
+    def alive(self) -> bool:
+        """Producer-liveness probe for the store watchdog: healthy while
+        any host's lease is live (or none has registered yet) and the
+        server hasn't recorded a terminal error."""
+        return self.server._error is None and self.server.health.any_alive()
+
+    def transport_stats(self) -> dict:
+        return self.server.transport_stats()
+
+    def close(self) -> None:
+        # drain first: producers see "done" on their next work request and
+        # exit on their own; only then tear the sockets down
+        self.server.stop_work()
+        for p in self._procs:
+            p.join(timeout=10.0)
+        self.server.close()
+        for p in self._procs:
+            if hasattr(p, "terminate") and p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        self._procs = []

@@ -50,14 +50,31 @@ class SampleStore:
 
     #: producer-liveness probe (``set_producer``); None = unknown
     _producer = None
+    #: optional producer description for stall diagnostics; None = unnamed
+    _producer_info = None
 
-    def set_producer(self, alive_fn) -> None:
-        """Wire a zero-arg producer-liveness probe (``WalkEngine.alive``):
-        a blocked ``get``/``episodes`` whose producer is dead fails with
-        ``StoreStalled`` instead of waiting out the stall deadline."""
+    def set_producer(self, alive_fn, info_fn=None) -> None:
+        """Wire a zero-arg producer-liveness probe (``WalkEngine.alive`` or
+        ``HostHealth.any_alive`` for remote producers): a blocked
+        ``get``/``episodes`` whose producer is dead fails with
+        ``StoreStalled`` instead of waiting out the stall deadline.
+        ``info_fn`` (e.g. ``HostHealth.describe``) renders the producer's
+        state for the diagnostic, so a stall names the dead HOST."""
         self._producer = alive_fn
+        self._producer_info = info_fn
 
     def put(self, epoch: int, episode: int, pairs: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def put_unique(self, epoch: int, episode: int, pairs: np.ndarray) -> bool:
+        """Idempotent ``put``: deliver the episode exactly once.
+
+        Returns False — WITHOUT blocking or storing — when the episode is
+        already resident, already consumed-and-dropped, or the store was
+        abandoned; True when this call delivered it. This is the store-side
+        half of the transport's exactly-once contract: a reconnecting
+        producer resends everything unacked, and redelivery lands here as a
+        no-op instead of a duplicate episode."""
         raise NotImplementedError
 
     def get(self, epoch: int, episode: int, *, block: bool = True) -> np.ndarray:
@@ -130,6 +147,17 @@ class MemorySampleStore(SampleStore):
             self._version += 1
             self._cv.notify_all()
 
+    def put_unique(self, epoch, episode, pairs):
+        with self._cv:
+            k = (epoch, episode)
+            if self._abandoned or k in self._data or k in self._dropped:
+                return False
+        # single delivery thread per store in the transport design, so the
+        # check-then-put window is benign; a racing duplicate would merely
+        # overwrite with bitwise-identical pairs
+        self.put(epoch, episode, pairs)
+        return True
+
     def finish_epoch(self, epoch):
         with self._cv:
             self._done.add(epoch)
@@ -140,6 +168,7 @@ class MemorySampleStore(SampleStore):
         with self._cv:
             dl = Deadline(self.stall_timeout_s, op="get",
                           key=(epoch, episode), producer=self._producer,
+                          producer_info=self._producer_info,
                           resident=self._resident_keys)
             while (epoch, episode) not in self._data:
                 if (epoch, episode) in self._dropped:
@@ -154,6 +183,7 @@ class MemorySampleStore(SampleStore):
         with self._cv:
             dl = Deadline(self.stall_timeout_s, op="episodes", key=epoch,
                           producer=self._producer,
+                          producer_info=self._producer_info,
                           resident=self._resident_keys)
             while epoch not in self._done:
                 dl.check(self._version, producer_done=epoch in self._done)
@@ -254,6 +284,13 @@ class DiskSampleStore(SampleStore):
         with open(crc_tmp, "w") as f:
             f.write(f"{zlib.crc32(blob):08x} {len(blob)}")
         os.replace(crc_tmp, path + ".crc")
+        # crash window between the two renames: a process dying RIGHT HERE
+        # leaves the new sidecar visible with no (or a stale) payload — the
+        # safe orientation, since a stale payload then fails its checksum
+        # (CorruptEpisodeError, retriable) instead of silently passing. The
+        # regression test crashes here and proves the invariant holds for
+        # both put and rewrite.
+        fault_point("disk.write", (epoch, episode, "publish"))
         if corrupt:
             with open(tmp, "wb") as f:
                 f.write(blob[:max(0, len(blob) - 16)])
@@ -280,6 +317,15 @@ class DiskSampleStore(SampleStore):
         self._publish(epoch, episode, pairs, corrupt=corrupt)
         with self._cv:
             self._cv.notify_all()
+
+    def put_unique(self, epoch, episode, pairs):
+        with self._cv:
+            if self._abandoned or (epoch, episode) in self._dropped:
+                return False
+        if os.path.exists(self._path(epoch, episode)):
+            return False
+        self.put(epoch, episode, pairs)
+        return True
 
     def rewrite(self, epoch, episode, pairs) -> None:
         """Re-publish one episode's payload (checksummed, atomic) without
@@ -325,7 +371,9 @@ class DiskSampleStore(SampleStore):
     def get(self, epoch, episode, *, block=True):
         path = self._path(epoch, episode)
         dl = Deadline(self.stall_timeout_s, op="get", key=(epoch, episode),
-                      producer=self._producer, resident=self._resident_keys)
+                      producer=self._producer,
+                      producer_info=self._producer_info,
+                      resident=self._resident_keys)
         next_check = time.monotonic()
         while not os.path.exists(path):
             if (epoch, episode) in self._dropped:
@@ -358,7 +406,9 @@ class DiskSampleStore(SampleStore):
         # like the memory store: wait for the walker to declare the epoch
         # complete, then report how many episodes were produced
         dl = Deadline(self.stall_timeout_s, op="episodes", key=epoch,
-                      producer=self._producer, resident=self._resident_keys)
+                      producer=self._producer,
+                      producer_info=self._producer_info,
+                      resident=self._resident_keys)
         next_check = time.monotonic()
         while not os.path.exists(self._done_path(epoch)):
             now = time.monotonic()

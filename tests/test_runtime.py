@@ -341,6 +341,48 @@ def test_disk_fresh_clears_stale_checksums(tmp_path):
     del b
 
 
+def test_disk_publish_crash_between_renames_stays_detectable(tmp_path):
+    """Regression for the ``_publish`` rename ordering: a process dying in
+    the window between the sidecar rename and the payload rename must leave
+    the store SAFE — either no payload at all (KeyError, nothing to read)
+    or a stale payload that fails the fresh sidecar's checksum
+    (CorruptEpisodeError, retriable) — never a silently readable torn
+    episode. Covers both the ``put`` and the ``rewrite`` repair path."""
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.arange(64, dtype=np.int32).reshape(32, 2)
+
+    # crash mid-publish during put: sidecar visible, payload never renamed
+    with inject("disk.write:crash:key=0/0/publish") as plan:
+        with pytest.raises(InjectedFault):
+            store.put(0, 0, pairs)
+    assert plan.fired
+    assert os.path.exists(store._path(0, 0) + ".crc")
+    assert not os.path.exists(store._path(0, 0))
+    with pytest.raises(KeyError):
+        store.get(0, 0, block=False)
+
+    # recovery: a plain rewrite republishes payload + sidecar atomically
+    store.rewrite(0, 0, pairs)
+    np.testing.assert_array_equal(np.asarray(store.get(0, 0)), pairs)
+
+    # now the harder orientation: corrupt the visible payload, then crash a
+    # repair rewrite in the same window — the fresh sidecar lands but the
+    # stale corrupt payload survives. Sidecar-first ordering means the
+    # mismatch is still DETECTED (fail loud, retriable), not served.
+    with open(store._path(0, 0), "r+b") as f:
+        f.seek(100)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(CorruptEpisodeError):
+        store.get(0, 0)
+    with inject("disk.write:crash:key=0/0/publish"):
+        with pytest.raises(InjectedFault):
+            store.rewrite(0, 0, pairs)
+    with pytest.raises(CorruptEpisodeError):
+        store.get(0, 0)                    # still corrupt, still detected
+    store.rewrite(0, 0, pairs)             # completed repair really repairs
+    np.testing.assert_array_equal(np.asarray(store.get(0, 0)), pairs)
+
+
 # ---------------------------------------------------------------------------
 # checkpoint integrity
 # ---------------------------------------------------------------------------
@@ -586,6 +628,57 @@ def test_batcher_attaches_degraded_meta():
         out = b.submit(np.zeros(2, np.float32)).result(timeout=10.0)
     assert len(out) == 3 and out[2] is meta
     assert b.stats.degraded == 1
+
+
+def test_batcher_stats_hammer_totals_are_consistent():
+    """Regression for the stats race: ``shed`` is bumped by submitter
+    threads while the worker bumps the rest — all writes now take the stats
+    lock, so under a multi-thread hammer every submitted request shows up in
+    EXACTLY one counter outcome and the snapshot totals add up."""
+    from repro.embed_serve import MicroBatcher
+
+    def serve(q):
+        time.sleep(0.0005)
+        return (np.zeros((q.shape[0], 2), np.float32),
+                np.zeros((q.shape[0], 2), np.int32))
+
+    b = MicroBatcher(serve, dim=4, max_batch=8, window_ms=0.5,
+                     pad_multiple=1, queue_cap=8, shed_on_full=True,
+                     deadline_ms=200.0)
+    N, THREADS = 150, 4
+    outcomes, mu = [], threading.Lock()
+
+    def pound():
+        served = shed = expired = 0
+        for _ in range(N):
+            try:
+                fut = b.submit(np.ones(4, np.float32))
+            except Overloaded:
+                shed += 1
+                continue
+            try:
+                fut.result(timeout=30.0)
+                served += 1
+            except DeadlineExceeded:
+                expired += 1
+        with mu:
+            outcomes.append((served, shed, expired))
+
+    threads = [threading.Thread(target=pound) for _ in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    b.close()
+    served = sum(o[0] for o in outcomes)
+    shed = sum(o[1] for o in outcomes)
+    expired = sum(o[2] for o in outcomes)
+    assert served + shed + expired == N * THREADS
+    st = b.stats_snapshot()
+    assert st.shed == shed
+    assert st.expired == expired
+    assert st.requests == served            # each served counted exactly once
+    assert st.batches > 0 and st.mean_batch >= 1.0
 
 
 # ---------------------------------------------------------------------------

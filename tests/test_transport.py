@@ -1,0 +1,437 @@
+"""Fault-tolerant walk transport: framing, exactly-once chunk assembly,
+host-health leases, and remote-producer chaos.
+
+The invariant under test everywhere: a remote-producer run is BITWISE
+identical to in-process production — with zero faults and under every
+``net.*`` chaos kind — because episodes are keyed ``(seed, epoch, episode,
+chunk)`` and redelivery is exactly-once at the assembler. The coordinator
+tests run thread-mode producers (same protocol, same sockets as the
+subprocess path) so they stay fast on the 1-core CI container.
+"""
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph import powerlaw_graph
+from repro.runtime import (FaultSpec, InjectedFault, StoreStalled,
+                           TransportError, inject)
+from repro.runtime.transport import (MAGIC, ChunkAssembler, FramedSocket,
+                                     HostHealth, _FRAME, decode_pairs,
+                                     encode_pairs, pack_frame)
+from repro.walk import (MemorySampleStore, RemoteWalkCoordinator, WalkConfig,
+                        WalkEngine)
+from repro.walk.store import DiskSampleStore
+
+
+def _pair():
+    a, b = socket.socketpair()
+    return FramedSocket(a), FramedSocket(b)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+def test_frame_roundtrip_over_socketpair():
+    tx, rx = _pair()
+    body = np.arange(1000, dtype=np.int32).tobytes()
+    tx.send({"t": "chunk", "episode": 3}, body)
+    msg, got = rx.recv()
+    assert msg == {"t": "chunk", "episode": 3}
+    assert got == body
+    assert tx.frames_sent == 1 and rx.frames_recv == 1
+    assert tx.bytes_sent == rx.bytes_recv > len(body)
+    tx.close(), rx.close()
+
+
+def test_frame_corrupt_body_fails_checksum():
+    tx, rx = _pair()
+    frame = bytearray(pack_frame({"t": "chunk"}, b"payload-bytes"))
+    frame[-3] ^= 0xFF                      # flip one body byte
+    tx.sock.sendall(bytes(frame))
+    with pytest.raises(TransportError, match="checksum"):
+        rx.recv()
+    tx.close(), rx.close()
+
+
+def test_frame_bad_magic_rejected():
+    tx, rx = _pair()
+    frame = bytearray(pack_frame({"t": "x"}))
+    frame[:4] = b"NOPE"
+    tx.sock.sendall(bytes(frame))
+    with pytest.raises(TransportError, match="magic"):
+        rx.recv()
+    tx.close(), rx.close()
+
+
+def test_frame_absurd_length_rejected():
+    tx, rx = _pair()
+    tx.sock.sendall(_FRAME.pack(MAGIC, 0, 2, (1 << 31) + 1) + b"{}")
+    with pytest.raises(TransportError, match="absurd"):
+        rx.recv()
+    tx.close(), rx.close()
+
+
+def test_recv_on_closed_peer_raises_connectionerror():
+    tx, rx = _pair()
+    tx.close()
+    with pytest.raises(ConnectionError):
+        rx.recv()
+    rx.close()
+
+
+def test_encode_decode_pairs_roundtrip():
+    pairs = np.random.default_rng(0).integers(
+        0, 1000, size=(257, 2)).astype(np.int32)
+    meta, body = encode_pairs(pairs)
+    out = decode_pairs(meta, body)
+    assert out.dtype == pairs.dtype
+    np.testing.assert_array_equal(out, pairs)
+
+
+def test_send_fault_sites_fire_only_when_injected():
+    tx, rx = _pair()
+    with inject("net.drop:fire:at=0") as plan:
+        tx.send({"t": "hb"})               # control frame: no injection
+        assert not plan.fired and tx.frames_dropped == 0
+        tx.send({"t": "chunk"}, b"x", key=(0, 0, 0), inject=True)
+        assert plan.fired and tx.frames_dropped == 1
+    msg, _ = rx.recv()                     # only the heartbeat arrived
+    assert msg == {"t": "hb"}
+    tx.close(), rx.close()
+
+
+def test_send_duplicate_and_reorder_sites():
+    tx, rx = _pair()
+    with inject("net.duplicate:fire:key=0/0/0",
+                "net.reorder:fire:key=0/0/1") as plan:
+        tx.send({"c": 0}, key=(0, 0, 0), inject=True)   # sent twice
+        tx.send({"c": 1}, key=(0, 0, 1), inject=True)   # held back
+        tx.send({"c": 2}, key=(0, 0, 2), inject=True)   # flushes the held one
+    order = [rx.recv()[0]["c"] for _ in range(4)]
+    assert order == [0, 0, 2, 1]
+    assert tx.frames_duplicated == 1
+    assert [f[0] for f in plan.fired] == ["net.duplicate", "net.reorder"]
+    tx.close(), rx.close()
+
+
+def test_send_disconnect_site_closes_and_raises():
+    tx, rx = _pair()
+    with inject("net.disconnect:fire:at=0"):
+        with pytest.raises(TransportError, match="disconnect"):
+            tx.send({"c": 0}, key=(0, 0, 0), inject=True)
+    with pytest.raises(ConnectionError):
+        rx.recv()                          # our end really closed
+    rx.close()
+
+
+# ---------------------------------------------------------------------------
+# exactly-once chunk assembly
+# property-test helpers (shared by the hypothesis tests below and the
+# deterministic spot-checks, so the invariant logic is exercised even on the
+# no-hypothesis container where @given tests skip)
+# ---------------------------------------------------------------------------
+def _check_assembler_interleaving(nchunks, rng_seed, extra):
+    """Deliver every chunk once plus `extra` redeliveries, in a shuffled
+    order: the episode must assemble exactly once, bitwise in chunk order,
+    with every redelivery flagged dup (the ack-and-discard contract)."""
+    chunks = {c: np.full((c + 1, 2), c, dtype=np.int32)
+              for c in range(nchunks)}
+    schedule = list(range(nchunks)) + [e % nchunks for e in extra]
+    np.random.default_rng(rng_seed).shuffle(schedule)
+    asm = ChunkAssembler()
+    assembled, dups = [], 0
+    for c in schedule:
+        dup, out = asm.add(7, 0, 0, c, nchunks, chunks[c])
+        dups += dup
+        if out is not None:
+            assembled.append(out)
+    assert len(assembled) == 1
+    np.testing.assert_array_equal(
+        assembled[0], np.concatenate([chunks[c] for c in range(nchunks)]))
+    assert dups == len(schedule) - nchunks
+    assert asm.complete(7, 0, 0)
+    # redelivery after completion: still acked as dup, never re-assembled
+    dup, out = asm.add(7, 0, 0, 0, nchunks, chunks[0])
+    assert dup and out is None
+
+
+def test_assembler_interleaving_spotchecks():
+    _check_assembler_interleaving(1, 0, [])
+    _check_assembler_interleaving(4, 1, [0, 0, 3])
+    _check_assembler_interleaving(8, 2, list(range(16)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(nchunks=st.integers(1, 8), rng_seed=st.integers(0, 1000),
+       extra=st.lists(st.integers(0, 63), max_size=16))
+def test_assembler_random_interleavings_property(nchunks, rng_seed, extra):
+    """Idempotence-key dedup under random duplicate/reorder interleavings."""
+    _check_assembler_interleaving(nchunks, rng_seed, extra)
+
+
+def test_assembler_rejects_bad_chunks():
+    asm = ChunkAssembler()
+    with pytest.raises(TransportError, match="out of range"):
+        asm.add(1, 0, 0, 3, 2, np.zeros((1, 2), np.int32))
+    asm.add(1, 0, 0, 0, 2, np.zeros((1, 2), np.int32))
+    with pytest.raises(TransportError, match="chunk count changed"):
+        asm.add(1, 0, 0, 1, 5, np.zeros((1, 2), np.int32))
+
+
+def test_assembler_forget_epoch_releases_keys():
+    asm = ChunkAssembler()
+    _, out = asm.add(1, 0, 0, 0, 1, np.ones((2, 2), np.int32))
+    assert out is not None and asm.complete(1, 0, 0)
+    asm.forget_epoch(1, 0)
+    assert not asm.complete(1, 0, 0)
+    dup, out = asm.add(1, 0, 0, 0, 1, np.ones((2, 2), np.int32))
+    assert not dup and out is not None    # a forgotten epoch can replay
+
+
+# ---------------------------------------------------------------------------
+# host health leases
+# ---------------------------------------------------------------------------
+def test_host_health_lease_lifecycle():
+    h = HostHealth(lease_s=0.15)
+    assert h.any_alive()                   # nobody registered: unknown != dead
+    h.beat("walker-0")
+    assert h.alive("walker-0") and h.any_alive() and h.hosts() == ["walker-0"]
+    assert h.expired() == []
+    time.sleep(0.2)
+    assert not h.alive("walker-0") and not h.any_alive()
+    assert h.expired() == ["walker-0"]
+    h.mark_dead("walker-0")
+    assert h.expired() == []               # marked hosts are not re-reported
+    assert "walker-0: DEAD" in h.describe()
+    h.beat("walker-0")                     # a beating host is not dead
+    assert h.alive("walker-0") and "alive" in h.describe()
+    snap = h.snapshot()
+    assert snap["walker-0"]["alive"]
+
+
+def test_store_stalled_names_dead_host():
+    """The watchdog's diagnostic must say WHICH producer host died."""
+    h = HostHealth(lease_s=0.05)
+    h.beat("walker-1")
+    time.sleep(0.1)
+    store = MemorySampleStore(stall_timeout_s=30.0)
+    store.set_producer(h.any_alive, h.describe)
+    with pytest.raises(StoreStalled) as ei:
+        store.get(0, 0)
+    assert "walker-1: DEAD" in str(ei.value)
+    assert ei.value.producer_alive is False
+
+
+# ---------------------------------------------------------------------------
+# fault-spec grammar (round-trip property + the key wildcard)
+# ---------------------------------------------------------------------------
+def _check_spec_roundtrip(site, kind, at, key, times, delay):
+    parts = [site, kind]
+    if at is not None:
+        parts.append(f"at={at}")
+    if key is not None:
+        parts.append(f"key={key}")
+    parts.append("times=inf" if times == float("inf") else f"times={times}")
+    if kind == "delay":
+        parts.append(f"delay={delay}")
+    s = FaultSpec.parse(":".join(parts))
+    assert (s.site, s.kind, s.key, s.times) == (site, kind, key, times)
+    if at is None and key is None and times == 1:
+        assert s.at == 0                   # bare spec pins to first invocation
+    else:
+        assert s.at == at
+    if kind == "delay":
+        assert s.delay_s == delay
+
+
+def test_fault_spec_roundtrip_spotchecks():
+    _check_spec_roundtrip("net.drop", "fire", 2, None, 1, 0.05)
+    _check_spec_roundtrip("net.delay", "delay", None, "0/1/0",
+                          float("inf"), 0.5)
+    _check_spec_roundtrip("producer.episode", "crash", None,
+                          "walker-0/*", 1, 0.05)
+    _check_spec_roundtrip("disk.write", "corrupt", None, None, 1, 0.05)
+
+
+@settings(max_examples=60, deadline=None)
+@given(site=st.sampled_from(["net.drop", "walk.chunk", "serve.shard"]),
+       kind=st.sampled_from(["crash", "delay", "corrupt", "fire"]),
+       at=st.one_of(st.just(None), st.integers(0, 99)),
+       key=st.one_of(st.just(None), st.just("0/1/2"), st.just("walker-0/*"),
+                     st.just("a"), st.just("w-1/3")),
+       times=st.one_of(st.just(1), st.integers(2, 9),
+                       st.just(float("inf"))),
+       delay=st.sampled_from([0.0, 0.05, 1.5]))
+def test_fault_spec_roundtrip_property(site, kind, at, key, times, delay):
+    """format -> parse recovers every field of the spec grammar."""
+    _check_spec_roundtrip(site, kind, at, key, times, delay)
+
+
+def test_fault_spec_key_wildcard_prefix_match():
+    s = FaultSpec.parse("producer.episode:crash:key=walker-0/*:times=inf")
+    assert s.matches(0, "walker-0/0/5")
+    assert s.matches(3, "walker-0/1/0")
+    assert not s.matches(0, "walker-1/0/5")
+    assert not s.matches(0, None)
+    # exact keys stay exact: no implicit prefixing
+    e = FaultSpec.parse("producer.episode:crash:key=walker-0/0:times=inf")
+    assert e.matches(0, "walker-0/0")
+    assert not e.matches(0, "walker-0/0/1")
+
+
+# ---------------------------------------------------------------------------
+# idempotent store puts
+# ---------------------------------------------------------------------------
+def test_put_unique_memory_store_dedups():
+    store = MemorySampleStore()
+    pairs = np.arange(10, dtype=np.int32).reshape(5, 2)
+    assert store.put_unique(0, 0, pairs)
+    assert not store.put_unique(0, 0, pairs)      # resident: duplicate
+    store.drop(0, 0)
+    assert not store.put_unique(0, 0, pairs)      # consumed: still duplicate
+    assert store.put_unique(0, 1, pairs)
+    np.testing.assert_array_equal(store.get(0, 1), pairs)
+
+
+def test_put_unique_disk_store_dedups(tmp_path):
+    store = DiskSampleStore(str(tmp_path))
+    pairs = np.arange(10, dtype=np.int32).reshape(5, 2)
+    assert store.put_unique(0, 0, pairs)
+    assert not store.put_unique(0, 0, pairs)      # file exists: duplicate
+    assert store.put_unique(0, 1, pairs)
+    np.testing.assert_array_equal(np.asarray(store.get(0, 1)), pairs)
+
+
+# ---------------------------------------------------------------------------
+# remote production end-to-end (thread-mode producers; same protocol and
+# sockets as the subprocess path, fast enough for the 1-core container)
+# ---------------------------------------------------------------------------
+GRAPH = None
+
+
+def _graph():
+    global GRAPH
+    if GRAPH is None:
+        GRAPH = powerlaw_graph(300, 4, seed=1)
+    return GRAPH
+
+
+def _wcfg():
+    # chunk_size=40 gives multiple chunks per episode so chunk-keyed
+    # net.* specs have real (epoch, episode, chunk>0) targets
+    return WalkConfig(walk_length=6, window=3, episodes=4, seed=3,
+                      chunk_size=40)
+
+
+def test_episode_chunk_stream_matches_episode_pairs():
+    eng = WalkEngine(_graph(), _wcfg())
+    for ep in range(2):
+        chunks = list(eng.episode_chunk_stream(0, ep))
+        assert len(chunks) >= 2            # the chaos tests need chunk 1
+        assert all(n == len(chunks) for _, n, _ in chunks)
+        np.testing.assert_array_equal(
+            np.concatenate([p for _, _, p in chunks]),
+            eng.episode_pairs(0, ep))
+
+
+def _run_remote_epochs(specs, *, num_producers=2, lease_s=20.0,
+                       epochs=2, expect_fired=True):
+    """Run `epochs` epochs through thread-mode remote producers under the
+    given fault specs; assert every episode lands bitwise-identical to the
+    in-process engine. Returns the coordinator's transport stats."""
+    g, wcfg = _graph(), _wcfg()
+    ref = WalkEngine(g, wcfg)
+    store = MemorySampleStore(depth=3, stall_timeout_s=60.0)
+    coord = RemoteWalkCoordinator(g, wcfg, store, num_producers=num_producers,
+                                  heartbeat_s=0.2, lease_s=lease_s,
+                                  mode="thread", ack_timeout_s=1.5)
+    with inject(*specs) as plan:
+        coord.start()
+        try:
+            for epoch in range(epochs):
+                h = coord.epoch_walker()
+                h.start_async(epoch)
+                for ep in range(wcfg.episodes):
+                    got = store.get(epoch, ep)
+                    np.testing.assert_array_equal(
+                        np.asarray(got).view(np.uint8),
+                        ref.episode_pairs(epoch, ep).view(np.uint8))
+                    store.drop(epoch, ep)
+                h.join()
+                assert h.finished()
+            stats = coord.transport_stats()
+        finally:
+            coord.close()
+    if expect_fired:
+        assert plan.fired, f"fault plan {specs} never fired"
+    return stats
+
+
+def test_remote_production_bitwise_identical_no_faults():
+    stats = _run_remote_epochs((), expect_fired=False)
+    # 2 epochs x 4 episodes x >=2 chunks, zero retransmission
+    assert stats["chunks_applied"] >= 16
+    assert stats["dup_chunks"] == 0 and stats["resend_rate"] == 0.0
+    assert stats["frames_recv"] > 0 and stats["bytes_recv"] > 0
+
+
+@pytest.mark.parametrize("spec", [
+    "net.drop:fire:key=0/1/0",            # chunk vanishes -> ack timeout
+    "net.duplicate:fire:key=0/2/1",       # chunk lands twice -> dup-acked
+    "net.disconnect:fire:key=0/1/1",      # socket dies mid-episode
+    "net.reorder:fire:key=0/0/0",         # chunk 0 arrives after chunk 1
+])
+def test_remote_production_bitwise_identical_under_chaos(spec):
+    """Reconnect-and-resend recovery is invisible to the trainer: the run
+    under each network fault is bitwise-identical to in-process walks."""
+    stats = _run_remote_epochs((spec,), epochs=1)
+    if "drop" in spec or "disconnect" in spec:
+        assert stats["dup_chunks"] >= 0    # resends may double-land
+    if "duplicate" in spec:
+        assert stats["dup_chunks"] >= 1    # the dup MUST have been discarded
+
+
+def test_killed_producer_episodes_reassigned_to_survivors():
+    """Kill walker-0 at its first assigned episode (whichever it is — the
+    /* wildcard absorbs assignment races): its lease lapses, the reclaim
+    loop reassigns, and walker-1 finishes the epoch bitwise-correct."""
+    stats = _run_remote_epochs(("producer.episode:crash:key=walker-0/*",),
+                               lease_s=2.0, epochs=1)
+    assert stats["chunks_applied"] >= 8
+
+
+def test_all_producers_dead_fails_fast_with_named_hosts():
+    g, wcfg = _graph(), _wcfg()
+    store = MemorySampleStore(depth=3, stall_timeout_s=60.0)
+    coord = RemoteWalkCoordinator(g, wcfg, store, num_producers=2,
+                                  heartbeat_s=0.1, lease_s=0.6,
+                                  mode="thread", ack_timeout_s=1.5)
+    with inject("producer.episode:crash:key=walker-0/*",
+                "producer.episode:crash:key=walker-1/*") as plan:
+        coord.start()
+        try:
+            h = coord.epoch_walker()
+            h.start_async(0)
+            with pytest.raises(TransportError, match="hosts are dead"):
+                coord.server.wait_epoch(0, timeout_s=30.0)
+            assert not coord.alive()
+            assert len(plan.fired) == 2
+        finally:
+            coord.close()
+
+
+def test_producer_resends_after_drop_without_duplicating_samples():
+    """A dropped chunk frame forces a full resend pass; the assembler's
+    idempotence keys keep every double-landed chunk out of the store."""
+    stats = _run_remote_epochs(("net.drop:fire:key=0/0/1",), epochs=1)
+    # exactly-once despite retransmission: applied == unique chunk count
+    eng = WalkEngine(_graph(), _wcfg())
+    unique = sum(len(list(eng.episode_chunk_stream(0, ep)))
+                 for ep in range(_wcfg().episodes))
+    assert stats["chunks_applied"] == unique
