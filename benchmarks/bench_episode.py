@@ -37,6 +37,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax                                                   # noqa: E402
 
 from common import append_run                                # noqa: E402
+from repro import obs                                        # noqa: E402
 from repro.core import (EpisodePipeline, HybridConfig,          # noqa: E402
                         HybridEmbeddingTrainer, build_episode_blocks)
 from repro.graph.generators import powerlaw_graph            # noqa: E402
@@ -122,6 +123,11 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
                   traffic (msgs/s, bytes, resend rate) for the timed epoch;
                   the gate warns when transport-fed throughput falls more
                   than 15% below the in-process streamed row.
+    obs_idle    — the streamed path once more with the telemetry layer live
+                  (metrics registry + in-memory span tracer, no file sinks):
+                  every instrumented hot path pays its enabled cost. Gated
+                  within 5% of the streamed row — observability that taxes
+                  the pipeline it observes is not cheap enough to leave on.
 
     Both modes time epoch 2 (identical sample stream — the chunk
     decomposition and RNG keying are worker-count-invariant) with the same
@@ -356,7 +362,6 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
         store.drop_epoch(6)
     finally:
         coord.close()
-    pipe.close()
     msgs = ((st_after["frames_recv"] + st_after["frames_sent"])
             - (st_before["frames_recv"] + st_before["frames_sent"]))
     rows.append({
@@ -377,6 +382,71 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
                                  - st_before["bytes_recv"]),
         "transport_resend_rate": st_after["resend_rate"],
         "transport_dup_chunks": st_after["dup_chunks"],
+    })
+
+    # ---- obs_idle: the streamed epoch again (epochs 7 warm / 8 timed, same
+    # warm-start structure) with the telemetry layer LIVE: registry installed,
+    # in-memory tracer recording every span, no file sinks. Every walk chunk,
+    # store put/get, pipeline stage and train episode takes its instrumented
+    # path — this row is the enabled cost of the obs layer, gated against the
+    # streamed baseline (the DISABLED cost is the zero-allocation test).
+    reg = obs.enable()
+    tr_obs = obs.Tracer()
+    obs.set_tracer(tr_obs)
+    try:
+        eng7 = WalkEngine(g, wcfg(walk_workers), store)
+        eng7.start_async(7)
+        eng8 = None
+        for ep in range(episodes):              # warm epoch (untimed)
+            pipe.prefetch_window(7, ep, episodes)
+            trainer.train_episode(pipe.get(7, ep))
+            if eng8 is None and eng7.finished():
+                eng7.join()
+                eng8 = WalkEngine(g, wcfg(walk_workers), store)
+                eng8.start_async(8)
+        eng7.join()
+        if eng8 is None:
+            eng8 = WalkEngine(g, wcfg(walk_workers), store)
+            eng8.start_async(8)
+        store.drop_epoch(7)
+
+        t0 = time.perf_counter()
+        walk_wait_s = build_s = stage_s = train_s = 0.0
+        n_samples = dropped = 0
+        for ep in range(episodes):              # timed epoch, telemetry live
+            pipe.prefetch_window(8, ep, episodes)
+            staged = pipe.get(8, ep)
+            times = pipe.pop_times(8, ep)
+            t = time.perf_counter()
+            trainer.train_episode(staged)
+            train_s += time.perf_counter() - t
+            walk_wait_s += times.get("walk_wait_s", 0.0)
+            build_s += times.get("build_s", 0.0)
+            stage_s += times.get("stage_s", 0.0)
+            n_samples += staged.num_samples
+            dropped += staged.dropped
+        wall_s = time.perf_counter() - t0
+        eng8.join()
+        walk_s = sum(t for (e, _), t in eng8.episode_walk_s.items() if e == 8)
+        store.drop_epoch(8)
+        snap = reg.snapshot()
+    finally:
+        obs.set_tracer(None)
+        obs.disable()
+    pipe.close()
+    rows.append({
+        "mode": "obs_idle", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": walk_workers, "pipeline_depth": depth,
+        "walk_s": walk_s, "walk_wait_s": walk_wait_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": store.peak_resident,
+        "obs_trace_events": tr_obs.event_count(),
+        "obs_metric_names": (len(snap["counters"]) + len(snap["gauges"])
+                             + len(snap["histograms"])),
     })
     return rows
 
@@ -482,6 +552,13 @@ def main():
                 print(f"WARNING: remote-walker transport costs >15% "
                       f"streamed throughput at B={B} d={d}: "
                       f"{by_mode['remote_walkers']:.1f} < "
+                      f"{by_mode['streamed']:.1f}")
+            # telemetry gate: the fully-instrumented pipeline with the
+            # registry + tracer live must hold within 5% of streamed
+            if by_mode.get("obs_idle", 0) < 0.95 * by_mode.get("streamed", 0):
+                print(f"WARNING: live telemetry costs >5% streamed "
+                      f"throughput at B={B} d={d}: "
+                      f"{by_mode['obs_idle']:.1f} < "
                       f"{by_mode['streamed']:.1f}")
 
     run = {

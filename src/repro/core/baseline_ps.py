@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.hybrid import HybridConfig
 from repro.core.partition import NodePartition, EpisodeBlocks
 from repro.kernels import ops
+from repro.obs import register_source
 
 
 @dataclasses.dataclass
@@ -49,6 +50,11 @@ class ParameterServerTrainer:
         self.part = NodePartition(num_nodes, dims=(1, num_devices),
                                   subparts=cfg.subparts)
         self.counters = PSCounters()
+        # surface the structural counters through the telemetry registry
+        # (no-op unless obs is enabled): one snapshot covers this baseline
+        # alongside the pipeline/transport/serve surfaces
+        register_source("baseline_ps",
+                        lambda: dataclasses.asdict(self.counters))
         rng = np.random.default_rng(cfg.seed)
         d = cfg.dim
         dt = np.dtype(cfg.dtype)     # same table dtype as the hybrid trainer

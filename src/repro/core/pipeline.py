@@ -27,7 +27,15 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.core.partition import NodePartition, build_episode_blocks
+from repro.obs import observe, span
 from repro.runtime import CorruptEpisodeError
+
+# Registry histogram / trace track per pipeline stage: every _record lands
+# in the process histogram too, so per-stage durations survive even when a
+# caller never pops (or the bounded per-episode table evicts the entry).
+_STAGE_METRIC = {"walk_wait_s": "pipeline.walk_wait_s",
+                 "build_s": "pipeline.build_s",
+                 "stage_s": "pipeline.stage_s"}
 
 
 class EpisodePipeline:
@@ -78,10 +86,19 @@ class EpisodePipeline:
         self._inflight: dict[tuple[int, int], object] = {}
         self._times: dict[tuple[int, int], dict] = {}
         self._times_mu = threading.Lock()   # stage workers write concurrently
+        # Bound on retained per-episode timing entries. Entries leave via
+        # pop_times; callers that consume out of prefetch order (or never
+        # pop) are covered by oldest-first eviction instead of the old
+        # liveness sweep in get(), which deleted timings for any episode
+        # already consumed — losing them before pop_times could run.
+        self._times_cap = max(64, 8 * self.depth)
 
     def _record(self, key, stage, seconds):
+        observe(_STAGE_METRIC[stage], seconds)  # registry copy: never dropped
         with self._times_mu:
             self._times.setdefault(key, {})[stage] = seconds
+            while len(self._times) > self._times_cap:
+                self._times.pop(next(iter(self._times)))
 
     # ------------------------------------------------------------- stages
     def _get_pairs(self, epoch: int, episode: int):
@@ -101,16 +118,18 @@ class EpisodePipeline:
 
     def _fetch(self, key):
         t0 = time.perf_counter()
-        pairs = self._get_pairs(*key)
+        with span("walk_wait", "walk", {"epoch": key[0], "episode": key[1]}):
+            pairs = self._get_pairs(*key)
         self._record(key, "walk_wait_s", time.perf_counter() - t0)
         return pairs
 
     def _build_from(self, key, fetch_fut):
         pairs = fetch_fut.result()
         t0 = time.perf_counter()
-        eb = build_episode_blocks(
-            np.asarray(pairs), self.part, block_cap=self.block_cap,
-            pad_multiple=self.pad_multiple, chunk=self.build_chunk)
+        with span("build", "build", {"epoch": key[0], "episode": key[1]}):
+            eb = build_episode_blocks(
+                np.asarray(pairs), self.part, block_cap=self.block_cap,
+                pad_multiple=self.pad_multiple, chunk=self.build_chunk)
         self._record(key, "build_s", time.perf_counter() - t0)
         if self.drop_consumed:
             self.store.drop(*key)   # pairs are bucketed; free the slot
@@ -119,18 +138,39 @@ class EpisodePipeline:
     def _stage_from(self, key, build_fut):
         eb = build_fut.result()
         t0 = time.perf_counter()
-        staged = self.stage_fn(eb)
+        with span("stage", "stage", {"epoch": key[0], "episode": key[1]}):
+            staged = self.stage_fn(eb)
         self._record(key, "stage_s", time.perf_counter() - t0)
         return staged
 
     def _build_sync(self, epoch: int, episode: int):
-        pairs = self._get_pairs(epoch, episode)
-        eb = build_episode_blocks(
-            np.asarray(pairs), self.part, block_cap=self.block_cap,
-            pad_multiple=self.pad_multiple, chunk=self.build_chunk)
+        """Prefetch-miss fallback: the same three stages inline, recording
+        the same per-stage timings (sync-built episodes used to record
+        nothing, leaving pop_times empty and the stage histograms blind to
+        exactly the episodes that were built on the critical path)."""
+        key = (epoch, episode)
+        t0 = time.perf_counter()
+        with span("walk_wait", "walk", {"epoch": epoch, "episode": episode,
+                                        "sync": True}):
+            pairs = self._get_pairs(epoch, episode)
+        self._record(key, "walk_wait_s", time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with span("build", "build", {"epoch": epoch, "episode": episode,
+                                     "sync": True}):
+            eb = build_episode_blocks(
+                np.asarray(pairs), self.part, block_cap=self.block_cap,
+                pad_multiple=self.pad_multiple, chunk=self.build_chunk)
+        self._record(key, "build_s", time.perf_counter() - t0)
         if self.drop_consumed:
             self.store.drop(epoch, episode)
-        return self.stage_fn(eb) if self.stage_fn is not None else eb
+        if self.stage_fn is None:
+            return eb
+        t0 = time.perf_counter()
+        with span("stage", "stage", {"epoch": epoch, "episode": episode,
+                                     "sync": True}):
+            staged = self.stage_fn(eb)
+        self._record(key, "stage_s", time.perf_counter() - t0)
+        return staged
 
     # ---------------------------------------------------------------- API
     def prefetch(self, epoch: int, episode: int) -> bool:
@@ -162,20 +202,17 @@ class EpisodePipeline:
         episode's blocks."""
         fut = self._inflight.pop((epoch, episode), None)
         if fut is not None:
-            out = fut.result()
-        else:
-            out = self._build_sync(epoch, episode)
-        # keep timing entries only for episodes still in flight + this one
-        live = set(self._inflight) | {(epoch, episode)}
-        with self._times_mu:
-            for k in [k for k in self._times if k not in live]:
-                del self._times[k]
-        return out
+            return fut.result()
+        return self._build_sync(epoch, episode)
 
     def pop_times(self, epoch: int, episode: int) -> dict:
         """Per-stage seconds recorded for a consumed episode:
         ``walk_wait_s`` (blocked in store.get), ``build_s``, ``stage_s``
-        (absent for sync-built or two-stage episodes)."""
+        (absent for two-stage pipelines). Entries persist until popped
+        (bounded by oldest-first eviction, cap ``max(64, 8*depth)``), so
+        consuming episodes out of prefetch order no longer loses their
+        timings; the ``pipeline.*_s`` registry histograms additionally
+        keep every duration regardless of pops."""
         with self._times_mu:
             return self._times.pop((epoch, episode), {})
 

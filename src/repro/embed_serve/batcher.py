@@ -35,6 +35,8 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs import (gauge_set, observe, register_source, span,
+                       trace_counter, unregister_source)
 from repro.runtime import DeadlineExceeded, Overloaded
 
 _CLOSE = object()
@@ -99,6 +101,18 @@ class MicroBatcher:
                                         name="embed-serve-batcher",
                                         daemon=True)
         self._thread.start()
+        # BatcherStats over the registry: the canonical counters live here
+        # (under _stats_mu); the registry polls them at snapshot time, so
+        # metrics.jsonl / diagnostics see the same numbers stats_snapshot
+        # callers do, without a second set of books
+        register_source("serve.batcher", self._stats_source)
+
+    def _stats_source(self) -> dict:
+        s = self.stats_snapshot()
+        d = dataclasses.asdict(s)
+        d["mean_batch"] = s.mean_batch
+        d["queue_depth"] = self._queue.qsize()
+        return d
 
     # ---------------------------------------------------------------- API
     def submit(self, query) -> Future:
@@ -110,11 +124,12 @@ class MicroBatcher:
         if self._closed:
             raise RuntimeError("MicroBatcher is closed")
         fut = Future()
+        t_sub = time.perf_counter()
         dl = (None if self._deadline_s is None
-              else time.perf_counter() + self._deadline_s)
+              else t_sub + self._deadline_s)
         if self._shed_on_full:
             try:
-                self._queue.put_nowait((q, fut, dl))
+                self._queue.put_nowait((q, fut, dl, t_sub))
             except queue.Full:
                 with self._stats_mu:
                     self.stats.shed += 1
@@ -122,7 +137,10 @@ class MicroBatcher:
                     f"queue full ({self._queue.maxsize}); request shed"
                 ) from None
         else:
-            self._queue.put((q, fut, dl))
+            self._queue.put((q, fut, dl, t_sub))
+        depth = self._queue.qsize()
+        gauge_set("serve.queue_depth", depth)
+        trace_counter("serve.queue_depth", depth)
         # a close() racing the check above either drains this item (worker
         # backlog or close's cancel loop) or already finished draining —
         # `_drained` was set before that final drain, so seeing it here
@@ -141,6 +159,7 @@ class MicroBatcher:
         if self._closed:
             return
         self._closed = True
+        unregister_source("serve.batcher")
         self._queue.put(_CLOSE)
         self._thread.join()
         # a submit() that raced close() past the closed check would
@@ -220,7 +239,7 @@ class MicroBatcher:
         # DeadlineExceeded, never a late answer
         now = time.perf_counter()
         live = []
-        for q, fut, dl in batch:
+        for q, fut, dl, t_sub in batch:
             if dl is not None and now > dl:
                 if fut.set_running_or_notify_cancel():
                     fut.set_exception(DeadlineExceeded(
@@ -230,28 +249,31 @@ class MicroBatcher:
                         self.stats.expired += 1
                 continue
             if fut.set_running_or_notify_cancel():
-                live.append((q, fut))
+                live.append((q, fut, t_sub))
         if not live:
             return
-        qs = np.stack([q for q, _ in live])
+        qs = np.stack([q for q, _, _ in live])
         B = qs.shape[0]
         Bp = -(-B // self._pad) * self._pad
         if Bp > B:                      # pad rows: results are discarded
             qs = np.concatenate(
                 [qs, np.zeros((Bp - B, self._dim), qs.dtype)])
         try:
-            out = self._serve_fn(qs)
+            with span("serve_batch", "serve", {"batch": B, "padded": Bp}):
+                out = self._serve_fn(qs)
         except Exception as e:          # noqa: BLE001 — propagate to callers
-            for _, fut in live:
+            for _, fut, _ in live:
                 fut.set_exception(e)
             return
         # backend returns (vals, ids) or (vals, ids, meta) — a degraded-scan
         # tag (TopKMeta) is attached to every request of the batch
         meta = out[2] if len(out) == 3 else None
         vals, ids = out[0], out[1]
-        for i, (_, fut) in enumerate(live):
+        t_done = time.perf_counter()
+        for i, (_, fut, t_sub) in enumerate(live):
             row = (np.asarray(vals[i]), np.asarray(ids[i]))
             fut.set_result(row if meta is None else row + (meta,))
+            observe("serve.request_s", t_done - t_sub)  # admission -> served
         with self._stats_mu:
             self.stats.requests += B
             self.stats.batches += 1

@@ -94,10 +94,32 @@ def main(argv=None):
                     help="exit 1 unless at least one response was actually "
                          "degraded (guards the chaos leg against a fault "
                          "plan that silently never fired)")
+    # telemetry (repro.obs; disabled unless one of these is given)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable the telemetry registry and append periodic "
+                         "snapshots to DIR/metrics.jsonl (+ final "
+                         "metrics_summary.json at exit)")
+    ap.add_argument("--metrics-interval-s", type=float, default=5.0,
+                    help="seconds between metrics.jsonl snapshots")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record serve_batch spans + queue-depth counter "
+                         "track as Chrome trace-event JSON (ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.embed_serve import quant as qz
     from repro.runtime import FaultPlan, clear_plan, install_plan
+
+    writer = obs_tracer = None
+    if args.metrics_dir or args.trace:
+        reg = obs.enable()
+        if args.trace:
+            obs_tracer = obs.Tracer()
+            obs.set_tracer(obs_tracer)
+        if args.metrics_dir:
+            writer = obs.MetricsWriter(reg, args.metrics_dir,
+                                       interval_s=args.metrics_interval_s)
+            print(f"metrics -> {writer.path}")
 
     quant = None if args.quant == "none" else args.quant
     impl = args.impl
@@ -167,6 +189,15 @@ def main(argv=None):
     batcher.close()
     if plan is not None:
         clear_plan()
+    if writer is not None:
+        writer.close()
+        print(f"metrics summary -> {writer.summary_path}")
+    if obs_tracer is not None:
+        obs.set_tracer(None)
+        obs_tracer.save(args.trace)
+        print(f"trace -> {args.trace} ({obs_tracer.event_count()} events)")
+    if writer is not None or obs_tracer is not None:
+        obs.disable()
 
     # results are (vals, ids) or (vals, ids, meta); union the failed shards
     # so the gate scores against what was actually answerable

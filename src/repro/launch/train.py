@@ -36,17 +36,32 @@ import numpy as np
 
 def train_embedding(args):
     import jax
+    from repro import obs
     from repro.configs.tencent_embedding import SMALL
     from repro.core import (EpisodePipeline, HybridConfig,
                             HybridEmbeddingTrainer)
     from repro.core import eval as ev
     from repro.graph.csr import build_csr
     from repro.graph.generators import powerlaw_graph
-    from repro.runtime import (FaultPlan, StoreStalled, TransportError,
-                               clear_plan, install_plan)
+    from repro.runtime import (FaultPlan, clear_plan, install_plan)
     from repro.train.checkpoint import load_arrays
     from repro.walk import (DiskSampleStore, MemorySampleStore,
                             RemoteWalkCoordinator, WalkConfig, WalkEngine)
+
+    # telemetry is opt-in (disabled-by-default hot paths are single None
+    # checks); enable BEFORE building the dataflow so components register
+    # their snapshot sources with the live registry
+    writer = obs_tracer = None
+    if args.metrics_dir or args.trace:
+        reg = obs.enable()
+        if args.trace:
+            obs_tracer = obs.Tracer()
+            obs.set_tracer(obs_tracer)
+        if args.metrics_dir:
+            writer = obs.MetricsWriter(reg, args.metrics_dir,
+                                       interval_s=args.metrics_interval_s)
+            print(f"metrics -> {writer.path} "
+                  f"(every {writer.interval_s:g}s)")
 
     if args.graph:
         from repro.graph.io import load_edge_list
@@ -171,9 +186,12 @@ def train_embedding(args):
             print(f"transport: {st['frames_recv']} frames / "
                   f"{st['bytes_recv']} bytes received, "
                   f"{st['dup_chunks']} duplicate chunk(s) discarded")
-    except (StoreStalled, TransportError) as e:
-        # leave a machine-readable dump for CI artifact upload: what
-        # stalled, what was resident, and which hosts were (not) beating
+    except BaseException as e:
+        # leave a machine-readable dump for CI artifact upload on ANY fatal
+        # exit — not just StoreStalled/TransportError, so a chaos leg that
+        # dies on an unexpected error still produces an artifact: what
+        # failed, what was resident, which hosts were (not) beating, and
+        # the live metrics snapshot when telemetry is on
         _dump_diagnostics(args.out_dir, e, coord)
         raise
     finally:
@@ -185,12 +203,24 @@ def train_embedding(args):
             coord.close()
         if plan is not None:
             clear_plan()
+        if writer is not None:
+            writer.close()
+            print(f"metrics summary -> {writer.summary_path}")
+        if obs_tracer is not None:
+            obs.set_tracer(None)
+            obs_tracer.save(args.trace)
+            print(f"trace -> {args.trace} "
+                  f"({obs_tracer.event_count()} events, "
+                  f"{obs_tracer.dropped} dropped)")
+        if writer is not None or obs_tracer is not None:
+            obs.disable()
 
 
 def _dump_diagnostics(out_dir, err, coord):
     """OUT_DIR/diagnostics.json: the stall/transport failure in machine-
     readable form (CI uploads it as an artifact on chaos-leg failure)."""
     import json
+    from repro import obs
     from repro.runtime import StoreStalled
 
     diag = {"error": type(err).__name__, "message": str(err)}
@@ -203,6 +233,9 @@ def _dump_diagnostics(out_dir, err, coord):
     if coord is not None:
         diag["host_health"] = coord.server.health.snapshot()
         diag["transport"] = coord.transport_stats()
+    reg = obs.active()
+    if reg is not None:          # fold the live registry into the dump
+        diag["metrics"] = reg.snapshot()
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, "diagnostics.json")
     with open(path, "w") as f:
@@ -230,6 +263,8 @@ def _train_embedding_epochs(args, cfg, trainer, engine, store, pipe,
                             test_e, neg_e, *, mk_walker,
                             start_epoch=0, start_episode=0):
     from repro.core import eval as ev
+    from repro.obs import counter_add, observe, span
+    from repro.obs import trace as _trace
     from repro.runtime import fault_point
     from repro.train.checkpoint import save_checkpoint
 
@@ -238,6 +273,8 @@ def _train_embedding_epochs(args, cfg, trainer, engine, store, pipe,
     for epoch in range(start_epoch, args.epochs):
         # streamed: do NOT join — training starts as soon as episode 0 lands
         # in the bounded store; the walker streams the rest concurrently
+        tr = _trace.tracer()
+        t_epoch_us = tr.now_us() if tr is not None else 0.0
         t0 = time.perf_counter()
         nxt = None
         losses = []
@@ -254,8 +291,13 @@ def _train_embedding_epochs(args, cfg, trainer, engine, store, pipe,
                     continue
                 pipe.prefetch_window(epoch, ep, args.episodes)
                 eb = pipe.get(epoch, ep)
-                losses.append(trainer.train_episode(
-                    eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+                t_ep = time.perf_counter()
+                with span("train_episode", "train",
+                          {"epoch": epoch, "episode": ep}):
+                    losses.append(trainer.train_episode(
+                        eb, lr=cfg.lr * max(1 - epoch / args.epochs, 0.05)))
+                observe("train.episode_s", time.perf_counter() - t_ep)
+                counter_add("train.episodes")
                 # paper: walks for e+1 overlap training e — launch them the
                 # moment this epoch's walker finishes (backpressure-paced)
                 if nxt is None and epoch + 1 < args.epochs and engine.finished():
@@ -279,11 +321,15 @@ def _train_embedding_epochs(args, cfg, trainer, engine, store, pipe,
             nxt = mk_walker()
             nxt.start_async(epoch + 1)
         store.drop_epoch(epoch)
-        V = trainer.embeddings()
-        Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
-        auc = ev.auc_score(
-            np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
-            np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
+        with span("eval", "train", {"epoch": epoch}):
+            V = trainer.embeddings()
+            Vn = V / (np.linalg.norm(V, axis=1, keepdims=True) + 1e-9)
+            auc = ev.auc_score(
+                np.einsum("ij,ij->i", Vn[test_e[:, 0]], Vn[test_e[:, 1]]),
+                np.einsum("ij,ij->i", Vn[neg_e[:, 0]], Vn[neg_e[:, 1]]))
+        if tr is not None:
+            tr.add_span("epoch", "train", t_epoch_us, tr.now_us(),
+                        {"epoch": epoch, "auc": round(float(auc), 4)})
         loss_s = f"{np.mean(losses):.4f}" if losses else "--"
         print(f"epoch {epoch:3d} loss {loss_s} AUC {auc:.4f} "
               f"({time.perf_counter()-t0:.1f}s)"
@@ -442,6 +488,17 @@ def main(argv=None):
     ap.add_argument("--min-auc", type=float, default=None,
                     help="exit non-zero if the final epoch's link-prediction "
                          "AUC is below this (CI sanity gate)")
+    # telemetry (repro.obs; disabled unless one of these is given)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable the telemetry registry and append periodic "
+                         "snapshots to DIR/metrics.jsonl (+ final "
+                         "metrics_summary.json at exit)")
+    ap.add_argument("--metrics-interval-s", type=float, default=5.0,
+                    help="seconds between metrics.jsonl snapshots")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a span timeline of the walk/build/stage/"
+                         "train pipeline and write Chrome trace-event JSON "
+                         "to FILE (load in ui.perfetto.dev)")
     ap.add_argument("--block-cap", type=int, default=None,
                     help="pin every episode's per-cell block capacity (rounds "
                          "up to the minibatch pad): episodes then share one "

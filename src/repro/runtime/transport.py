@@ -36,6 +36,7 @@ import zlib
 
 import numpy as np
 
+from repro.obs import counter_add
 from repro.runtime.errors import TransportError
 from repro.runtime.faults import fault_point
 
@@ -106,6 +107,7 @@ class FramedSocket:
                 raise TransportError(f"injected disconnect (key={key!r})")
             if fault_point("net.drop", key):
                 self.frames_dropped += 1
+                counter_add("transport.frames_dropped")
                 return                             # the wire ate it
             dup = fault_point("net.duplicate", key)
             reorder = fault_point("net.reorder", key)
@@ -118,6 +120,7 @@ class FramedSocket:
             self._sendall(frame)
             if dup:
                 self.frames_duplicated += 1
+                counter_add("transport.frames_duplicated")
                 self._sendall(frame)
             if self._held is not None:
                 held, self._held = self._held, None
@@ -130,6 +133,11 @@ class FramedSocket:
             raise TransportError(f"send failed: {e}") from e
         self.frames_sent += 1
         self.bytes_sent += len(frame)
+        # process-wide mirrors: per-connection ints above stay the canonical
+        # per-socket view (aggregated by RemoteEpisodeServer.transport_stats);
+        # the registry counters are the cross-connection totals
+        counter_add("transport.frames_sent")
+        counter_add("transport.bytes_sent", len(frame))
 
     # --------------------------------------------------------------- recv
     def _read_exact(self, n: int) -> bytes:
@@ -158,6 +166,8 @@ class FramedSocket:
             raise TransportError("frame checksum mismatch")
         self.frames_recv += 1
         self.bytes_recv += _FRAME.size + hdr_len + body_len
+        counter_add("transport.frames_recv")
+        counter_add("transport.bytes_recv", _FRAME.size + hdr_len + body_len)
         return _loads(hdr), body
 
     def close(self) -> None:

@@ -40,6 +40,8 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.obs import counter_add, observe
+from repro.obs import trace as _trace
 from repro.runtime import RetryPolicy, call_with_retry, fault_point
 from repro.walk.augment import walks_to_pairs
 from repro.walk.store import SampleStore
@@ -180,6 +182,19 @@ class WalkEngine:
         with self._walk_s_mu:
             key = (epoch, episode)
             self.episode_walk_s[key] = self.episode_walk_s.get(key, 0.0) + dt
+        counter_add("walk.chunks")
+        counter_add("walk.pairs", int(pairs.shape[0]))
+        observe("walk.chunk_s", dt)
+        tr = _trace.tracer()
+        if tr is not None:
+            # one lane per worker thread: concurrent chunk spans on a shared
+            # lane would render as bogus nesting in Perfetto
+            end = tr.now_us()
+            tr.add_span("walk_chunk",
+                        "walk:" + threading.current_thread().name,
+                        end - dt * 1e6, end,
+                        {"epoch": epoch, "episode": episode, "chunk": chunk,
+                         "pairs": int(pairs.shape[0])})
         return pairs
 
     def _chunk_retrying(self, epoch: int, episode: int, chunk: int,

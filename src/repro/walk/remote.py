@@ -44,6 +44,9 @@ import socket
 import threading
 import time
 
+from repro.obs import (counter_add, register_source, span,
+                       unregister_source)
+from repro.obs import trace as _trace
 from repro.runtime import FaultPlan, fault_point, install_plan
 from repro.runtime.errors import InjectedFault, TransportError
 from repro.runtime.transport import (ChunkAssembler, FramedSocket, HostHealth,
@@ -105,6 +108,10 @@ class RemoteEpisodeServer:
         self._conns: list[FramedSocket] = []
         self._closed_stats = {"frames_recv": 0, "bytes_recv": 0,
                               "frames_sent": 0, "bytes_sent": 0}
+        # first-chunk arrival time per (host, epoch, episode), for the
+        # per-host receive-lane trace spans; one writer thread per episode
+        # (its host's connection), so no lock needed
+        self._recv_t0: dict[tuple, float] = {}
         self._threads: list[threading.Thread] = []
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -209,7 +216,9 @@ class RemoteEpisodeServer:
                     ep, pairs = heapq.heappop(self._ready)
                 # store.put may block on backpressure — outside the lock so
                 # chunk handlers / assignment keep running meanwhile
-                self.store.put_unique(epoch, ep, pairs)
+                with span("store_put", "store",
+                          {"epoch": epoch, "episode": ep}):
+                    self.store.put_unique(epoch, ep, pairs)
                 with self._cv:
                     self._next_put += 1
                     done = self._next_put >= self.num_episodes
@@ -294,6 +303,8 @@ class RemoteEpisodeServer:
         host = msg.get("host", "?")
         self.health.beat(host)
         if t in ("hello", "hb"):
+            if t == "hb":
+                counter_add("transport.heartbeats")
             return {"t": "ok", "seed": self.seed}
         if t == "bye":
             return None
@@ -322,7 +333,20 @@ class RemoteEpisodeServer:
         dup, assembled = self.assembler.add(
             msg["seed"], epoch, ep, msg["chunk"], msg["nchunks"],
             decode_pairs(msg, body))
+        counter_add("transport.chunks_recv")
+        if dup:
+            counter_add("transport.dup_chunks")
         complete = assembled is not None
+        tr = _trace.tracer()
+        if tr is not None:
+            host = msg.get("host", "?")
+            k = (host, epoch, ep)
+            t0 = self._recv_t0.setdefault(k, tr.now_us())
+            if complete:
+                self._recv_t0.pop(k, None)
+                tr.add_span("recv_episode", f"host:{host}", t0, tr.now_us(),
+                            {"epoch": epoch, "episode": ep,
+                             "nchunks": msg["nchunks"]})
         if complete:
             with self._cv:
                 if epoch == self._epoch and ep >= self._next_put:
@@ -459,6 +483,8 @@ class RemoteProducer:
                 self._conn = None
 
     def _ship_episode(self, epoch: int, episode: int) -> None:
+        tr = _trace.tracer()
+        t_ship = tr.now_us() if tr is not None else 0.0
         chunks = list(self.engine.episode_chunk_stream(epoch, episode))
         acked: set[int] = set()
         attempts = 0
@@ -470,6 +496,8 @@ class RemoteProducer:
                     f"{attempts - 1} transport attempts")
             if attempts > 1:
                 self.chunks_resent += len(chunks) - len(acked)
+                counter_add("transport.chunks_resent",
+                            len(chunks) - len(acked))
             try:
                 conn = self._connection()
                 for c, n, pairs in chunks:
@@ -496,6 +524,15 @@ class RemoteProducer:
                 # frame: reconnect and resend whatever is unacked — the
                 # server's idempotence keys discard anything that DID land
                 self._drop_connection()
+        counter_add("walk.episodes_shipped")
+        if tr is not None:
+            # walk + ship + ack-drain for one assigned episode, on this
+            # producer's lane (thread-mode producers share the trainer's
+            # tracer; subprocess producers run with obs disabled)
+            tr.add_span("ship_episode", "producer:" + self.host, t_ship,
+                        tr.now_us(), {"epoch": epoch, "episode": episode,
+                                      "chunks": len(chunks),
+                                      "attempts": attempts})
 
 
 def _producer_main(address, host, graph, wcfg, inject_specs, heartbeat_s):
@@ -558,6 +595,11 @@ class RemoteWalkCoordinator:
 
     def start(self) -> None:
         self.server.start()
+        # one source of truth for the wire + lease surfaces: the registry
+        # snapshot (metrics.jsonl, diagnostics.json) reads the live
+        # aggregation instead of anyone keeping a parallel copy
+        register_source("transport", self.transport_stats)
+        register_source("host_health", self.server.health.snapshot)
         set_producer = getattr(self.store, "set_producer", None)
         if callable(set_producer):
             set_producer(self.alive, self.server.health.describe)
@@ -614,3 +656,5 @@ class RemoteWalkCoordinator:
                 p.terminate()
                 p.join(timeout=5.0)
         self._procs = []
+        unregister_source("transport")
+        unregister_source("host_health")

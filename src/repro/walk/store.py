@@ -35,6 +35,7 @@ import zlib
 
 import numpy as np
 
+from repro.obs import counter_add, gauge_set, observe, trace_counter
 from repro.runtime import (CorruptEpisodeError, Deadline, fault_point)
 
 #: default seconds without store progress before a blocked wait raises
@@ -128,6 +129,7 @@ class MemorySampleStore(SampleStore):
 
     def put(self, epoch, episode, pairs):
         fault_point("store.put", (epoch, episode))
+        t0 = time.perf_counter()
         with self._cv:
             if self.depth is not None:
                 # no producer probe here: put's stall means the CONSUMER
@@ -141,9 +143,13 @@ class MemorySampleStore(SampleStore):
                     self._cv.wait(timeout=dl.wait_s())
             if self._abandoned:
                 return
+            observe("store.put_wait_s", time.perf_counter() - t0)
+            counter_add("store.puts")
             self._data[(epoch, episode)] = pairs
             self._counts[epoch] = self._counts.get(epoch, 0) + 1
             self.peak_resident = max(self.peak_resident, len(self._data))
+            gauge_set("store.resident", len(self._data))
+            trace_counter("store.resident", len(self._data))
             self._version += 1
             self._cv.notify_all()
 
@@ -165,6 +171,7 @@ class MemorySampleStore(SampleStore):
             self._cv.notify_all()
 
     def get(self, epoch, episode, *, block=True):
+        t0 = time.perf_counter()
         with self._cv:
             dl = Deadline(self.stall_timeout_s, op="get",
                           key=(epoch, episode), producer=self._producer,
@@ -177,6 +184,8 @@ class MemorySampleStore(SampleStore):
                     raise KeyError((epoch, episode))
                 dl.check(self._version, producer_done=epoch in self._done)
                 self._cv.wait(timeout=dl.wait_s())
+            observe("store.get_blocked_s", time.perf_counter() - t0)
+            counter_add("store.gets")
             return self._data[(epoch, episode)]
 
     def episodes(self, epoch):
@@ -194,6 +203,8 @@ class MemorySampleStore(SampleStore):
         with self._cv:
             if self._data.pop((epoch, episode), None) is not None:
                 self._dropped.add((epoch, episode))
+                gauge_set("store.resident", len(self._data))
+                trace_counter("store.resident", len(self._data))
                 self._version += 1
                 self._cv.notify_all()
 
@@ -298,6 +309,7 @@ class DiskSampleStore(SampleStore):
 
     def put(self, epoch, episode, pairs):
         fault_point("store.put", (epoch, episode))
+        t0 = time.perf_counter()
         with self._cv:
             if self.depth is not None:
                 dl = Deadline(self.stall_timeout_s, op="put",
@@ -309,9 +321,13 @@ class DiskSampleStore(SampleStore):
                     self._cv.wait(timeout=dl.wait_s())
             if self._abandoned:
                 return
+            observe("store.put_wait_s", time.perf_counter() - t0)
+            counter_add("store.puts")
             self._resident.add((epoch, episode))
             self._produced[epoch] = self._produced.get(epoch, 0) + 1
             self.peak_resident = max(self.peak_resident, len(self._resident))
+            gauge_set("store.resident", len(self._resident))
+            trace_counter("store.resident", len(self._resident))
             self._version += 1
         corrupt = fault_point("disk.write", (epoch, episode))
         self._publish(epoch, episode, pairs, corrupt=corrupt)
@@ -370,6 +386,7 @@ class DiskSampleStore(SampleStore):
 
     def get(self, epoch, episode, *, block=True):
         path = self._path(epoch, episode)
+        t0 = time.perf_counter()
         dl = Deadline(self.stall_timeout_s, op="get", key=(epoch, episode),
                       producer=self._producer,
                       producer_info=self._producer_info,
@@ -390,6 +407,8 @@ class DiskSampleStore(SampleStore):
                 dl.check(self._disk_version(epoch), producer_done=done)
                 next_check = now + dl.wait_s()
             time.sleep(self.poll_s)
+        observe("store.get_blocked_s", time.perf_counter() - t0)
+        counter_add("store.gets")
         return self._load_verified(epoch, episode)
 
     def _disk_version(self, epoch):
@@ -439,6 +458,8 @@ class DiskSampleStore(SampleStore):
                 if os.path.exists(path + ".crc"):
                     os.remove(path + ".crc")
             self._resident.discard((epoch, episode))
+            gauge_set("store.resident", len(self._resident))
+            trace_counter("store.resident", len(self._resident))
             self._version += 1
             self._cv.notify_all()
 

@@ -1,0 +1,399 @@
+"""Telemetry layer (repro.obs): registry math, tracer, and integration.
+
+Covers the observability PR's acceptance points: histogram percentiles
+against the numpy inverted-CDF oracle (including past the reservoir cap),
+thread-safety of counters and the tracer under a hammer, the disabled-mode
+zero-allocation guarantee (the fault_point design rule), the pipeline
+timing fixes (sync builds record, out-of-prefetch-order consumption no
+longer loses timings), the metrics sink, and diagnostics.json on ANY
+fatal launcher exception — metrics snapshot included.
+"""
+import json
+import math
+import os
+import threading
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import Histogram, Registry, Tracer
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Telemetry is process-global state; never leak it across tests."""
+    obs.disable()
+    obs.set_tracer(None)
+    yield
+    obs.disable()
+    obs.set_tracer(None)
+
+
+# ---------------------------------------------------------------------------
+# histogram: exact percentiles vs the numpy oracle, reservoir behaviour
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 100, 999, 4096])
+def test_histogram_percentiles_match_numpy_inverted_cdf(n):
+    rng = np.random.default_rng(n)
+    vals = rng.normal(size=n)
+    h = Histogram(cap=4096)
+    for v in vals:
+        h.observe(v)
+    for q in (0, 1, 50, 95, 99, 100):
+        assert h.percentile(q) == np.percentile(vals, q,
+                                                method="inverted_cdf")
+    s = h.summary()
+    assert s["count"] == n and s["exact"]
+    assert s["min"] == vals.min() and s["max"] == vals.max()
+    assert s["sum"] == pytest.approx(float(vals.sum()), rel=1e-12)
+    assert s["mean"] == pytest.approx(float(vals.mean()), rel=1e-12)
+    assert (s["p50"], s["p95"], s["p99"]) == tuple(
+        np.percentile(vals, q, method="inverted_cdf") for q in (50, 95, 99))
+
+
+def test_histogram_reservoir_bounded_and_deterministic():
+    n, cap = 20_000, 256
+    rng = np.random.default_rng(7)
+    vals = rng.random(n)
+    h1, h2 = Histogram(cap=cap), Histogram(cap=cap)
+    for v in vals:
+        h1.observe(v)
+        h2.observe(v)
+    # bounded memory, exact moments, sampled percentiles
+    assert len(h1._values) == cap
+    s = h1.summary()
+    assert s["count"] == n and not s["exact"]
+    assert s["min"] == vals.min() and s["max"] == vals.max()
+    assert s["sum"] == pytest.approx(float(vals.sum()), rel=1e-9)
+    assert abs(s["p50"] - 0.5) < 0.12       # uniform(0,1) median via sample
+    # deterministic per-histogram RNG: identical streams, identical summary
+    assert s == h2.summary()
+
+
+def test_histogram_empty_summary():
+    h = Histogram()
+    s = h.summary()
+    assert s["count"] == 0 and s["p50"] is None and s["min"] is None
+    assert math.isnan(h.percentile(50))
+
+
+def test_registry_kind_collision_raises():
+    reg = Registry()
+    reg.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.histogram("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# thread hammer: counters and spans under contention stay exact
+# ---------------------------------------------------------------------------
+def test_counter_hammer_multithreaded_is_exact():
+    reg = obs.enable()
+    threads, per = 8, 5_000
+
+    def work():
+        for _ in range(per):
+            obs.counter_add("hammer")
+            obs.counter_add("hammer.by3", 3)
+            obs.observe("hammer.hist", 1.0)
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter("hammer").value == threads * per
+    assert reg.counter("hammer.by3").value == 3 * threads * per
+    assert reg.histogram("hammer.hist").count == threads * per
+
+
+def test_tracer_span_hammer_multithreaded():
+    tr = Tracer()
+    obs.set_tracer(tr)
+    threads, per = 8, 250
+
+    def work():
+        for i in range(per):
+            with obs_trace.span("unit", "train", {"i": i}):
+                pass
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert tr.event_count() == threads * per
+    assert tr.dropped == 0
+
+
+def test_tracer_bounded_past_cap():
+    tr = Tracer(max_events=10)
+    for _ in range(50):
+        tr.instant("tick", "train")
+    assert tr.event_count() == 10
+    assert tr.dropped == 40
+    assert tr.to_json()["otherData"]["dropped_events"] == 40
+
+
+# ---------------------------------------------------------------------------
+# disabled mode: the fault_point rule — no allocation on the hot path
+# ---------------------------------------------------------------------------
+def test_disabled_span_is_shared_noop_singleton():
+    assert obs_trace.span("a", "walk") is obs_trace.span("b", "serve")
+
+
+def test_disabled_helpers_allocate_nothing():
+    """With no registry/tracer installed, every helper must be one
+    module-level None check: zero allocations attributed to repro.obs."""
+    obs_dir = os.path.dirname(obs.__file__)
+
+    def hot_loop():
+        for _ in range(200):
+            obs.counter_add("c")
+            obs.counter_add("c", 5)
+            obs.gauge_set("g", 1.0)
+            obs.observe("h", 0.5)
+            obs.trace_counter("tc", 3)
+            obs.instant("i", "walk")
+            with obs_trace.span("s", "train"):
+                pass
+
+    hot_loop()                      # warm caches before measuring
+    tracemalloc.start()
+    try:
+        before = tracemalloc.take_snapshot()
+        hot_loop()
+        after = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    stats = after.compare_to(before, "lineno")
+    leaked = [s for s in stats
+              if s.traceback[0].filename.startswith(obs_dir)
+              and s.size_diff > 0]
+    assert not leaked, [str(s) for s in leaked]
+
+
+# ---------------------------------------------------------------------------
+# trace JSON shape: Perfetto-loadable, named ordered tracks
+# ---------------------------------------------------------------------------
+def test_trace_json_shape_and_roundtrip(tmp_path):
+    tr = Tracer()
+    obs.set_tracer(tr)
+    with obs_trace.span("build", "build", {"episode": 0}):
+        time.sleep(0.001)
+    tr.add_span("recv_episode", "host:w1", 10.0, 250.0, {"chunks": 3})
+    obs_trace.trace_counter("store.resident", 2)
+    obs.set_tracer(None)
+
+    j = tr.to_json()
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    with open(path) as f:
+        assert json.load(f) == j
+
+    evs = j["traceEvents"]
+    names = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    # canonical lanes pinned in fixed order, dynamic lane appended after
+    for i, track in enumerate(obs_trace.PIPELINE_TRACKS):
+        assert names[track] == i + 1
+    assert names["host:w1"] > len(obs_trace.PIPELINE_TRACKS)
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"build", "recv_episode"}
+    for e in xs:
+        assert e["pid"] == 1 and e["ts"] >= 0 and e["dur"] >= 0
+    counters = [e for e in evs if e["ph"] == "C"]
+    assert counters and counters[0]["args"]["value"] == 2
+
+
+# ---------------------------------------------------------------------------
+# registry sources: collector surfaces fold into one snapshot
+# ---------------------------------------------------------------------------
+def test_snapshot_sources_poll_and_capture_errors():
+    reg = obs.enable()
+    obs.counter_add("a.frames", 4)
+    obs.gauge_set("a.depth", 7)
+    obs.register_source("good", lambda: {"leases": 2})
+    obs.register_source("bad", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap["counters"]["a.frames"] == 4
+    assert snap["gauges"]["a.depth"] == 7
+    assert snap["sources"]["good"] == {"leases": 2}
+    assert "ZeroDivisionError" in snap["sources"]["bad"]["error"]
+    obs.unregister_source("bad")
+    assert "bad" not in reg.snapshot()["sources"]
+    json.dumps(snap, default=str)       # the whole snapshot serializes
+
+
+# ---------------------------------------------------------------------------
+# pipeline timing fixes (satellite: sync builds + out-of-order retention)
+# ---------------------------------------------------------------------------
+def _mk_pipe(store_depth=None, **kw):
+    from repro.core import EpisodePipeline
+    from repro.core.partition import NodePartition
+    from repro.walk import MemorySampleStore
+
+    rng = np.random.default_rng(0)
+    store = MemorySampleStore() if store_depth is None else \
+        MemorySampleStore(depth=store_depth)
+    for ep in range(4):
+        store.put(0, ep, rng.integers(0, 100, size=(60, 2)).astype(np.int32))
+    part = NodePartition(100, dims=(1,), subparts=1)
+    return EpisodePipeline(store, part, pad_multiple=8, **kw)
+
+
+def test_pipeline_sync_build_records_stage_timings():
+    """An episode built on the prefetch-miss path (no prefetch() call) must
+    record the same per-stage timings as a prefetched one — and the registry
+    histograms must see them too."""
+    reg = obs.enable()
+    pipe = _mk_pipe(stage_fn=lambda eb: eb)
+    try:
+        pipe.get(0, 0)                        # never prefetched: sync build
+        times = pipe.pop_times(0, 0)
+        assert set(times) == {"walk_wait_s", "build_s", "stage_s"}
+        assert all(v >= 0 for v in times.values())
+        hists = reg.snapshot()["histograms"]
+        for name in ("pipeline.walk_wait_s", "pipeline.build_s",
+                     "pipeline.stage_s"):
+            assert hists[name]["count"] == 1
+    finally:
+        pipe.close()
+
+
+def test_pipeline_out_of_order_consumption_keeps_timings():
+    """Consuming prefetched episodes out of order used to sweep the timings
+    of every not-yet-popped episode; now they survive until popped (or
+    until the bounded-cap eviction, far away)."""
+    pipe = _mk_pipe(depth=4)
+    try:
+        pipe.prefetch_window(0, 0, 3)
+        for ep in (0, 1, 2):
+            pipe.get(0, ep)
+        # pop AFTER all gets — the old liveness sweep deleted these
+        for ep in (0, 1, 2):
+            times = pipe.pop_times(0, ep)
+            assert set(times) == {"walk_wait_s", "build_s"}, (ep, times)
+        assert pipe.pop_times(0, 2) == {}     # pop is consume-once
+    finally:
+        pipe.close()
+
+
+def test_pipeline_times_dict_is_bounded():
+    pipe = _mk_pipe()
+    try:
+        for i in range(pipe._times_cap * 3):
+            pipe._record((0, i), "build_s", 0.001)
+        assert len(pipe._times) == pipe._times_cap
+        assert pipe.pop_times(0, 0) == {}                      # oldest gone
+        assert pipe.pop_times(0, pipe._times_cap * 3 - 1)      # newest kept
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# store + batcher integration: counters/gauges/histograms flow when enabled
+# ---------------------------------------------------------------------------
+def test_store_metrics_flow():
+    from repro.walk import MemorySampleStore
+
+    reg = obs.enable()
+    store = MemorySampleStore()
+    pairs = np.zeros((5, 2), np.int32)
+    store.put(0, 0, pairs)
+    store.get(0, 0)
+    store.drop(0, 0)
+    snap = reg.snapshot()
+    assert snap["counters"]["store.puts"] == 1
+    assert snap["counters"]["store.gets"] == 1
+    assert snap["gauges"]["store.resident"] == 0
+    assert snap["histograms"]["store.put_wait_s"]["count"] == 1
+    assert snap["histograms"]["store.get_blocked_s"]["count"] == 1
+
+
+def test_batcher_metrics_and_source_lifecycle():
+    from repro.embed_serve import MicroBatcher
+
+    reg = obs.enable()
+
+    def serve_fn(q):
+        return q.sum(axis=1, keepdims=True), \
+            np.zeros((q.shape[0], 1), np.int64)
+
+    b = MicroBatcher(serve_fn, dim=4, max_batch=8, window_ms=1.0)
+    try:
+        assert "serve.batcher" in reg.snapshot()["sources"]
+        futs = [b.submit(np.ones(4, np.float32)) for _ in range(5)]
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        b.close()
+    snap = reg.snapshot()
+    assert "serve.batcher" not in snap["sources"]   # unregistered at close
+    assert snap["histograms"]["serve.request_s"]["count"] == 5
+    assert "serve.queue_depth" in snap["gauges"]
+
+
+# ---------------------------------------------------------------------------
+# metrics sink: periodic jsonl + final summary
+# ---------------------------------------------------------------------------
+def test_metrics_writer_jsonl_and_summary(tmp_path):
+    reg = obs.enable()
+    obs.counter_add("sink.test", 42)
+    w = obs.MetricsWriter(reg, str(tmp_path), interval_s=0.05)
+    time.sleep(0.25)
+    w.close()
+    assert w.last_error is None
+    with open(w.path) as f:
+        lines = [json.loads(line) for line in f if line.strip()]
+    assert len(lines) >= 2                  # periodic lines + the close line
+    for snap in lines:
+        assert {"ts", "elapsed_s", "counters", "gauges", "histograms",
+                "sources"} <= set(snap)
+        assert snap["counters"]["sink.test"] == 42
+    with open(w.summary_path) as f:
+        summary = json.load(f)
+    assert summary["lines_written"] == len(lines)
+    assert summary["counters"]["sink.test"] == 42
+
+
+# ---------------------------------------------------------------------------
+# launcher: ANY fatal exception dumps diagnostics.json with the metrics snap
+# ---------------------------------------------------------------------------
+_TRAIN_ARGS = ["--arch", "tencent-embedding", "--nodes", "240", "--dim", "16",
+               "--epochs", "2", "--episodes", "3", "--subparts", "2",
+               "--minibatch", "32", "--negatives", "4", "--neg-pool", "256",
+               "--walk-workers", "2", "--seed", "3"]
+
+
+def test_train_dumps_diagnostics_with_metrics_on_any_fatal(tmp_path):
+    """A crash that is neither StoreStalled nor TransportError (here an
+    InjectedFault) must still leave OUT_DIR/diagnostics.json — with the
+    telemetry registry folded in when --metrics-dir enabled it."""
+    from repro.launch.train import main as train_main
+    from repro.runtime import InjectedFault
+
+    out = str(tmp_path / "run")
+    mdir = str(tmp_path / "metrics")
+    with pytest.raises(InjectedFault):
+        train_main(_TRAIN_ARGS + [
+            "--out-dir", out, "--metrics-dir", mdir,
+            "--metrics-interval-s", "0.2",
+            "--inject", "train.episode:crash:key=0/1"])
+    with open(os.path.join(out, "diagnostics.json")) as f:
+        diag = json.load(f)
+    assert diag["error"] == "InjectedFault"
+    m = diag["metrics"]
+    assert m["counters"]["walk.chunks"] >= 1
+    assert m["counters"]["train.episodes"] == 1      # died before (0, 1)
+    assert m["histograms"]["pipeline.build_s"]["count"] >= 1
+    # the sink closed cleanly on the failure path too
+    assert os.path.exists(os.path.join(mdir, "metrics_summary.json"))
+    # the launcher's finally tore the global registry down
+    assert obs.active() is None

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Schema gate for the telemetry artifacts (--metrics-dir / --trace).
+
+Validates what the CI telemetry leg uploads, so a refactor that silently
+stops emitting a stage's spans — or breaks the metrics.jsonl schema that
+downstream dashboards parse — fails the build instead of shipping a blind
+observability layer:
+
+* ``--metrics FILE``  — every line of metrics.jsonl is a JSON registry
+  snapshot with ``ts``/``elapsed_s``/``counters``/``gauges``/
+  ``histograms``/``sources``, and every histogram summary carries
+  ``count``/``sum``/``min``/``max``/``mean``/``p50``/``p95``/``p99``.
+* ``--summary FILE``  — the final metrics_summary.json parses and carries
+  ``lines_written``.
+* ``--trace FILE``    — Chrome trace-event JSON: ``traceEvents`` is a
+  list, every event's ``tid`` maps to a ``thread_name`` metadata event
+  (Perfetto renders unnamed tids as garbage lanes), and every track named
+  in ``--require-tracks`` has at least one complete ("X") span — matched
+  by exact track name or ``name:*`` dynamic-lane prefix (walk workers,
+  producer hosts).
+
+Exit 0 with a one-line summary per artifact; exit 1 naming the first
+violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_SNAP_KEYS = {"ts", "elapsed_s", "counters", "gauges", "histograms",
+              "sources"}
+_HIST_KEYS = {"count", "sum", "min", "max", "mean", "p50", "p95", "p99"}
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_snapshot(snap: dict, where: str) -> None:
+    missing = _SNAP_KEYS - set(snap)
+    if missing:
+        fail(f"{where}: snapshot missing keys {sorted(missing)}")
+    for name, c in snap["counters"].items():
+        if not isinstance(c, int) or c < 0:
+            fail(f"{where}: counter {name!r} is {c!r}, want non-negative int")
+    for name, h in snap["histograms"].items():
+        missing = _HIST_KEYS - set(h)
+        if missing:
+            fail(f"{where}: histogram {name!r} missing {sorted(missing)}")
+        if h["count"] > 0 and h["p50"] is None:
+            fail(f"{where}: histogram {name!r} has count {h['count']} "
+                 f"but no percentiles")
+
+
+def check_metrics(path: str) -> None:
+    with open(path) as f:
+        lines = [line for line in f if line.strip()]
+    if not lines:
+        fail(f"{path}: empty — the writer never flushed a snapshot")
+    for i, line in enumerate(lines):
+        try:
+            snap = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{path}:{i + 1}: not JSON ({e})")
+        check_snapshot(snap, f"{path}:{i + 1}")
+    last = json.loads(lines[-1])
+    print(f"ok: {path}: {len(lines)} snapshots, "
+          f"{len(last['counters'])} counters, "
+          f"{len(last['histograms'])} histograms, "
+          f"{len(last['sources'])} sources over {last['elapsed_s']:.1f}s")
+
+
+def check_summary(path: str) -> None:
+    with open(path) as f:
+        summary = json.load(f)
+    check_snapshot(summary, path)
+    if "lines_written" not in summary:
+        fail(f"{path}: missing lines_written")
+    if "sink_error" in summary:
+        fail(f"{path}: sink reported an error: {summary['sink_error']}")
+    print(f"ok: {path}: final summary, "
+          f"{summary['lines_written']} jsonl lines written")
+
+
+def check_trace(path: str, require_tracks: list[str]) -> None:
+    with open(path) as f:
+        trace = json.load(f)
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    names = {e["tid"]: e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    spans_per_track: dict[str, int] = {}
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            continue
+        if e["tid"] not in names:
+            fail(f"{path}: event {e.get('name')!r} on unnamed tid "
+                 f"{e['tid']} (no thread_name metadata)")
+        if ph == "X":
+            if e.get("ts", -1) < 0 or e.get("dur", -1) < 0:
+                fail(f"{path}: span {e['name']!r} has bad ts/dur: {e}")
+            track = names[e["tid"]]
+            spans_per_track[track] = spans_per_track.get(track, 0) + 1
+    for want in require_tracks:
+        hits = sum(n for track, n in spans_per_track.items()
+                   if track == want or track.startswith(want + ":"))
+        if hits == 0:
+            fail(f"{path}: no complete span on required track {want!r} "
+                 f"(tracks seen: {sorted(spans_per_track)})")
+    dropped = trace.get("otherData", {}).get("dropped_events", 0)
+    print(f"ok: {path}: {sum(spans_per_track.values())} spans over "
+          f"{len(spans_per_track)} tracks "
+          f"({', '.join(sorted(spans_per_track))}), {dropped} dropped")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--metrics", help="metrics.jsonl to validate")
+    ap.add_argument("--summary", help="metrics_summary.json to validate")
+    ap.add_argument("--trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--require-tracks", default="",
+                    help="comma-separated track names that must each have "
+                         "at least one span (name or name:* dynamic lane)")
+    args = ap.parse_args(argv)
+    if not (args.metrics or args.summary or args.trace):
+        ap.error("nothing to check: pass --metrics, --summary, or --trace")
+    if args.metrics:
+        check_metrics(args.metrics)
+    if args.summary:
+        check_summary(args.summary)
+    if args.trace:
+        tracks = [t for t in args.require_tracks.split(",") if t]
+        check_trace(args.trace, tracks)
+
+
+if __name__ == "__main__":
+    main()
