@@ -123,6 +123,13 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
                   traffic (msgs/s, bytes, resend rate) for the timed epoch;
                   the gate warns when transport-fed throughput falls more
                   than 15% below the in-process streamed row.
+    coordinator_failover — the remote_walkers shape with one mid-epoch
+                  coordinator kill + recovering restart on the same port:
+                  measures what a takeover (store-scan queue rebuild +
+                  producer reconnect backoff) costs end to end, plus the
+                  successor's time to first applied chunk. Warns when the
+                  interrupted epoch's throughput drops >20% below the
+                  uninterrupted remote_walkers row.
     obs_idle    — the streamed path once more with the telemetry layer live
                   (metrics registry + in-memory span tracer, no file sinks):
                   every instrumented hot path pays its enabled cost. Gated
@@ -433,7 +440,6 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
     finally:
         obs.set_tracer(None)
         obs.disable()
-    pipe.close()
     rows.append({
         "mode": "obs_idle", "impl": impl, "B": B, "d": d,
         "mesh": list(mesh_shape), "episodes": episodes,
@@ -447,6 +453,79 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
         "obs_trace_events": tr_obs.event_count(),
         "obs_metric_names": (len(snap["counters"]) + len(snap["gauges"])
                              + len(snap["histograms"])),
+    })
+
+    # ---- coordinator_failover: the remote_walkers row under one mid-epoch
+    # coordinator kill + takeover (epochs 9 warm / 10 timed). Right after
+    # the first timed episode is consumed, the episode server is killed and
+    # a recovering successor starts on the same port: it rebuilds the work
+    # queue from the store while the subprocess producers ride out the
+    # outage in their jittered backoff loops and reattach. The row records
+    # end-to-end samples/s ACROSS the takeover, the takeover wall time, and
+    # the successor's time to its first applied chunk — gated against the
+    # remote_walkers row (warn when the restart costs >20% throughput).
+    coord = RemoteWalkCoordinator(g, wcfg(1), store, num_producers=2,
+                                  heartbeat_s=0.5, lease_s=30.0,
+                                  mode="process", server_grace_s=60.0)
+    coord.start()
+    try:
+        h9 = coord.epoch_walker()
+        h9.start_async(9)
+        for ep in range(episodes):                  # warm epoch (untimed)
+            pipe.prefetch_window(9, ep, episodes)
+            trainer.train_episode(pipe.get(9, ep))
+        h9.join()
+        store.drop_epoch(9)
+
+        st_before = coord.transport_stats()
+        t0 = time.perf_counter()
+        # open the timed epoch and kill the coordinator the moment its
+        # first chunks are in flight: the epoch is produced almost entirely
+        # by the recovering successor, so first_chunk_s measures the real
+        # reattach-and-produce recovery latency
+        h10 = coord.epoch_walker()
+        h10.start_async(10)
+        takeover_s = coord.restart_server()
+        walk_wait_s = build_s = stage_s = train_s = 0.0
+        n_samples = dropped = 0
+        for ep in range(episodes):                  # timed epoch + takeover
+            pipe.prefetch_window(10, ep, episodes)
+            staged = pipe.get(10, ep)
+            times = pipe.pop_times(10, ep)
+            t = time.perf_counter()
+            trainer.train_episode(staged)
+            train_s += time.perf_counter() - t
+            walk_wait_s += times.get("walk_wait_s", 0.0)
+            build_s += times.get("build_s", 0.0)
+            stage_s += times.get("stage_s", 0.0)
+            n_samples += staged.num_samples
+            dropped += staged.dropped
+        wall_s = time.perf_counter() - t0
+        h10.join()
+        st_after = coord.transport_stats()
+        fo = coord.failover_stats()
+        store.drop_epoch(10)
+    finally:
+        coord.close()
+    pipe.close()
+    rows.append({
+        "mode": "coordinator_failover", "impl": impl, "B": B, "d": d,
+        "mesh": list(mesh_shape), "episodes": episodes,
+        "walk_workers": 2, "pipeline_depth": depth,
+        "walk_s": 0.0, "walk_wait_s": walk_wait_s, "build_s": build_s,
+        "stage_s": stage_s, "train_s": train_s, "wall_s": wall_s,
+        "samples_per_epoch": n_samples, "dropped": dropped,
+        "samples_per_s": n_samples / wall_s,
+        "overlap_efficiency": _overlap_efficiency(train_s, wall_s),
+        "peak_resident_episodes": store.peak_resident,
+        "takeover_s": takeover_s,
+        # None when every episode had already landed before the kill and
+        # the successor had nothing left to produce
+        "recovery_first_chunk_s": fo.get("first_chunk_s"),
+        "failover_recovered_episodes": fo["recovered_episodes"],
+        "transport_resend_rate": st_after["resend_rate"],
+        "transport_dup_chunks": (st_after["dup_chunks"]
+                                 - st_before["dup_chunks"]),
     })
     return rows
 
@@ -560,6 +639,20 @@ def main():
                       f"throughput at B={B} d={d}: "
                       f"{by_mode['obs_idle']:.1f} < "
                       f"{by_mode['streamed']:.1f}")
+            # failover gate: one coordinator kill + store-reconstructed
+            # takeover mid-epoch must cost <20% of the uninterrupted
+            # remote-walker throughput (producer backoff + queue rebuild).
+            # Only meaningful when the epoch is long enough to amortize the
+            # fixed reattach latency — at --smoke scale a ~0.1s epoch is
+            # dominated by it and the ratio says nothing.
+            by_wall = {r["mode"]: r["wall_s"] for r in rows}
+            if (by_wall.get("remote_walkers", 0) >= 1.0
+                    and by_mode.get("coordinator_failover", 0)
+                    < 0.80 * by_mode.get("remote_walkers", 0)):
+                print(f"WARNING: coordinator failover costs >20% "
+                      f"remote-walker throughput at B={B} d={d}: "
+                      f"{by_mode['coordinator_failover']:.1f} < "
+                      f"{by_mode['remote_walkers']:.1f}")
 
     run = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

@@ -48,6 +48,14 @@ def train_embedding(args):
     from repro.walk import (DiskSampleStore, MemorySampleStore,
                             RemoteWalkCoordinator, WalkConfig, WalkEngine)
 
+    # flag validation first: fail before any graph/trainer work happens
+    if args.coordinator_resume and args.remote_walkers <= 0:
+        raise SystemExit("--coordinator-resume requires --remote-walkers")
+    if args.coordinator_resume and not args.resume:
+        raise SystemExit("--coordinator-resume requires --resume (the "
+                         "trainer cursor tells the server which epochs to "
+                         "re-submit)")
+
     # telemetry is opt-in (disabled-by-default hot paths are single None
     # checks); enable BEFORE building the dataflow so components register
     # their snapshot sources with the live registry
@@ -132,9 +140,12 @@ def train_embedding(args):
                   f"previous run; this run's epochs will overwrite same-"
                   f"numbered files and may race stale .done markers — use a "
                   f"fresh --store-dir to keep both artifacts")
+        # --coordinator-resume reconstructs the episode server's state FROM
+        # the store, so a resuming run must never wipe the surviving files
+        keep_files = args.keep_samples or args.coordinator_resume
         store = DiskSampleStore(sample_dir, depth=store_depth,
                                 keep=args.keep_samples,
-                                fresh=not args.keep_samples, **store_kw)
+                                fresh=not keep_files, **store_kw)
     else:
         store = MemorySampleStore(depth=store_depth, **store_kw)
     wcfg = WalkConfig(walk_length=10, window=5, episodes=args.episodes,
@@ -163,13 +174,19 @@ def train_embedding(args):
         coord = RemoteWalkCoordinator(
             g, wcfg, store, num_producers=args.remote_walkers,
             heartbeat_s=args.heartbeat_s, lease_s=args.lease_s,
-            inject_specs=args.inject)
+            inject_specs=args.inject, port=args.coordinator_port,
+            recover=args.coordinator_resume,
+            server_grace_s=args.server_grace_s)
         coord.start()
         mk_walker = coord.epoch_walker
         print(f"remote walkers: {args.remote_walkers} subprocess "
               f"producer(s) @ {coord.server.address[0]}:"
               f"{coord.server.address[1]} (heartbeat {args.heartbeat_s}s, "
-              f"lease {args.lease_s}s)")
+              f"lease {args.lease_s}s, grace {args.server_grace_s}s)")
+        if args.coordinator_resume:
+            print(f"coordinator takeover: recovering server on port "
+                  f"{coord.server.address[1]} reconstructs epoch state "
+                  f"from the {args.store} store")
     else:
         def mk_walker():
             return WalkEngine(g, wcfg, store)
@@ -186,6 +203,11 @@ def train_embedding(args):
             print(f"transport: {st['frames_recv']} frames / "
                   f"{st['bytes_recv']} bytes received, "
                   f"{st['dup_chunks']} duplicate chunk(s) discarded")
+            fo = coord.failover_stats()
+            if fo["takeovers"] or fo["recovered_episodes"]:
+                print(f"failover: {fo['takeovers']} takeover(s), "
+                      f"{fo['recovered_episodes']} episode(s) recovered "
+                      f"from the store without re-production")
     except BaseException as e:
         # leave a machine-readable dump for CI artifact upload on ANY fatal
         # exit — not just StoreStalled/TransportError, so a chaos leg that
@@ -233,6 +255,7 @@ def _dump_diagnostics(out_dir, err, coord):
     if coord is not None:
         diag["host_health"] = coord.server.health.snapshot()
         diag["transport"] = coord.transport_stats()
+        diag["failover"] = coord.failover_stats()
     reg = obs.active()
     if reg is not None:          # fold the live registry into the dump
         diag["metrics"] = reg.snapshot()
@@ -465,6 +488,21 @@ def main(argv=None):
                          "stream is bitwise-identical either way; "
                          "subprocesses walk outside the GIL and survive "
                          "producer crashes via lease-based reassignment")
+    ap.add_argument("--coordinator-resume", action="store_true",
+                    help="with --resume and --remote-walkers: build the "
+                         "episode server in recovery mode — it reconstructs "
+                         "the work queue from the sample store (complete "
+                         "episodes skipped, partial ones replayed via the "
+                         "RNG keys) instead of starting the epoch from 0")
+    ap.add_argument("--coordinator-port", type=int, default=0,
+                    help="fixed listen port for the episode server (default "
+                         "0 = ephemeral); a restarted coordinator must "
+                         "reuse its predecessor's port so producers in "
+                         "their reconnect-backoff loop can reattach")
+    ap.add_argument("--server-grace-s", type=float, default=30.0,
+                    help="producer-side outage budget: how long a producer "
+                         "keeps retrying (jittered capped backoff) against "
+                         "an unreachable episode server before giving up")
     ap.add_argument("--heartbeat-s", type=float, default=1.0,
                     help="remote producer heartbeat interval")
     ap.add_argument("--lease-s", type=float, default=10.0,

@@ -34,6 +34,26 @@ is deliberately uninstrumented so ordinal-based specs target the
 deterministic chunk stream, not timing-dependent polling.
 ``producer.episode`` fires at the top of each assigned episode, keyed
 ``(host, epoch, episode)``, so a chaos plan can kill one specific host.
+
+Coordinator failover: the server itself is restartable. Its work-queue
+state (pending/assigned episodes, the ordered-put cursor) is small and
+fully reconstructible from the :class:`SampleStore` contents plus the
+``(seed, epoch, episode, chunk)`` RNG keying — the same replay property
+``--resume`` exploits for trainer crash-resume. A server built with
+``recover=True`` scans the store at each epoch activation: the longest
+contiguous prefix of already-accepted episodes becomes the put cursor
+(complete episodes are never re-produced), everything after it is
+re-queued for assignment (partial episodes replay bitwise via the RNG
+keys; the fresh :class:`ChunkAssembler`'s dedup absorbs any chunks still
+in flight from before the takeover — recovery needs no new wire state).
+Producers, for their part, treat ANY server loss — connect refused, hello
+timeout, dead heartbeat — as an outage to ride out: a jittered capped
+exponential-backoff reconnect loop (:class:`~repro.runtime.retry.
+RetryPolicy`, seeded per host so the fleet never thunders in lockstep)
+resends everything unacked on reattach, and only gives up once the
+outage outlives ``server_grace_s``. Killing the coordinator mid-epoch
+and restarting it therefore resumes the epoch bitwise-identically to an
+uninterrupted run (test- and CI-gated).
 """
 from __future__ import annotations
 
@@ -43,12 +63,14 @@ import multiprocessing as mp
 import socket
 import threading
 import time
+import zlib
 
-from repro.obs import (counter_add, register_source, span,
+from repro.obs import (counter_add, observe, register_source, span,
                        unregister_source)
 from repro.obs import trace as _trace
 from repro.runtime import FaultPlan, fault_point, install_plan
 from repro.runtime.errors import InjectedFault, TransportError
+from repro.runtime.retry import RetryPolicy
 from repro.runtime.transport import (ChunkAssembler, FramedSocket, HostHealth,
                                      decode_pairs, encode_pairs)
 from repro.walk.engine import WalkConfig, WalkEngine
@@ -57,18 +79,12 @@ from repro.walk.engine import WalkConfig, WalkEngine
 WAIT_POLL_S = 0.05
 
 
-def _connect(address, *, timeout_s: float = 30.0) -> socket.socket:
-    """Connect with retry: the producers race the server's listen()."""
-    deadline = time.monotonic() + timeout_s
-    while True:
-        try:
-            s = socket.create_connection(address, timeout=5.0)
-            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            return s
-        except OSError:
-            if time.monotonic() >= deadline:
-                raise
-            time.sleep(0.05)
+def _connect_once(address) -> socket.socket:
+    """Single connect attempt; retry scheduling lives in the callers'
+    :class:`RetryPolicy` loops (jittered, grace-bounded)."""
+    s = socket.create_connection(address, timeout=5.0)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s
 
 
 class RemoteEpisodeServer:
@@ -85,7 +101,9 @@ class RemoteEpisodeServer:
     """
 
     def __init__(self, store, num_episodes: int, seed: int, *,
-                 lease_s: float = 10.0, window: int | None = None):
+                 lease_s: float = 10.0, window: int | None = None,
+                 port: int = 0, recover: bool = False,
+                 carry_stats: dict | None = None):
         self.store = store
         self.num_episodes = num_episodes
         self.seed = seed
@@ -93,6 +111,21 @@ class RemoteEpisodeServer:
         self.assembler = ChunkAssembler()
         depth = getattr(store, "depth", None)
         self.window = window or max(2, (depth or 2) + 1)
+        # Failover: a recovering successor re-derives each epoch's put
+        # cursor from store.accepted_episodes() at activation instead of
+        # starting from 0 — see _activate_locked. carry_stats folds a dead
+        # predecessor's transport aggregates into this server's, so
+        # bench/diagnostics deltas stay monotonic across a takeover.
+        self.recover_mode = recover
+        self.recovered_episodes = 0
+        self._dup_base = 0
+        self._applied_base = 0
+        self._t0 = time.monotonic()
+        #: wall seconds from construction to the first applied (non-dup)
+        #: chunk — the bench's recovery-time-to-first-chunk metric
+        self.first_chunk_s: float | None = None
+        if recover:
+            counter_add("failover.takeovers")
         self._mu = threading.Lock()
         self._cv = threading.Condition(self._mu)
         self._epoch: int | None = None
@@ -108,6 +141,11 @@ class RemoteEpisodeServer:
         self._conns: list[FramedSocket] = []
         self._closed_stats = {"frames_recv": 0, "bytes_recv": 0,
                               "frames_sent": 0, "bytes_sent": 0}
+        if carry_stats:
+            for k in self._closed_stats:
+                self._closed_stats[k] += carry_stats.get(k, 0)
+            self._dup_base = carry_stats.get("dup_chunks", 0)
+            self._applied_base = carry_stats.get("chunks_applied", 0)
         # first-chunk arrival time per (host, epoch, episode), for the
         # per-host receive-lane trace spans; one writer thread per episode
         # (its host's connection), so no lock needed
@@ -115,7 +153,7 @@ class RemoteEpisodeServer:
         self._threads: list[threading.Thread] = []
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._lsock.bind(("127.0.0.1", 0))
+        self._lsock.bind(("127.0.0.1", port))
         self._lsock.listen(64)
         # timeout-polling accept: closing a listener does not reliably wake
         # a thread blocked in accept(), so poll with a short timeout and
@@ -154,23 +192,86 @@ class RemoteEpisodeServer:
         for t in self._threads:
             t.join(timeout=5.0)
 
+    def kill(self) -> None:
+        """SIGKILL-equivalent stop for failover tests and the bench: drop
+        the listener and every connection WITHOUT the ``stop_work`` drain
+        handshake, so producers observe a dead server (connection errors),
+        never a clean ``done``. The work-queue state dies with this object;
+        a successor built with ``recover=True`` on the same port
+        reconstructs it from the store."""
+        self._stop_evt.set()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        with self._mu:
+            conns = list(self._conns)
+        for c in conns:
+            c.close()
+        # only after the sockets are dead: a live producer must never win a
+        # race and see the shutdown "done" reply from a killed server
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        # short join: a put thread blocked on store backpressure only wakes
+        # at the next consumer drop; it re-checks _shutdown then and exits
+        # (its in-flight put is idempotent at the store), so don't stall
+        # the takeover on it
+        for t in self._threads:
+            t.join(timeout=1.0)
+
     # ------------------------------------------------------------------ epochs
     def submit_epoch(self, epoch: int) -> None:
+        finished: list[int] = []
         with self._cv:
             if self._error is not None:
                 raise self._error
-            if self._epoch is None:
-                self._activate_locked(epoch)
+            if (epoch == self._epoch or epoch in self._finished_epochs
+                    or epoch in self._epoch_queue):
+                pass          # idempotent resubmission (coordinator takeover)
+            elif self._epoch is None:
+                finished = self._activate_locked(epoch)
             else:
                 self._epoch_queue.append(epoch)
             self._cv.notify_all()
+        for e in finished:     # store calls stay outside the lock
+            self.store.finish_epoch(e)
 
-    def _activate_locked(self, epoch: int) -> None:
-        self._epoch = epoch
-        self._pending = collections.deque(range(self.num_episodes))
-        self._assigned = {}
-        self._ready = []
-        self._next_put = 0
+    def _activate_locked(self, epoch: int) -> list[int]:
+        """Make ``epoch`` the producing epoch. In recovery mode, scan the
+        store first: the longest contiguous prefix of already-accepted
+        episodes becomes the put cursor (never re-produced); the rest is
+        re-queued and replayed bitwise via the RNG keys. An epoch the store
+        already holds in full finishes immediately and the next queued one
+        activates — returns those epochs so the caller can run their
+        ``store.finish_epoch`` outside the lock."""
+        done: list[int] = []
+        while True:
+            base = 0
+            if self.recover_mode:
+                accepted = set(self.store.accepted_episodes(epoch))
+                while base < self.num_episodes and base in accepted:
+                    base += 1
+                if base:
+                    self.recovered_episodes += base
+                    counter_add("failover.recovered_episodes", base)
+                    print(f"remote-walk: takeover of epoch {epoch}: store "
+                          f"already accepted episodes [0..{base}); "
+                          f"re-producing {self.num_episodes - base}")
+            self._epoch = epoch
+            self._pending = collections.deque(range(base, self.num_episodes))
+            self._assigned = {}
+            self._ready = []
+            self._next_put = base
+            if base < self.num_episodes:
+                return done
+            # the whole epoch landed before the takeover
+            self._finished_epochs.add(epoch)
+            self._epoch = None
+            done.append(epoch)
+            if not self._epoch_queue:
+                return done
+            epoch = self._epoch_queue.popleft()
 
     def epoch_finished(self, epoch: int) -> bool:
         with self._mu:
@@ -178,17 +279,28 @@ class RemoteEpisodeServer:
 
     def wait_epoch(self, epoch: int, timeout_s: float | None = None) -> None:
         """Block until ``epoch`` has fully landed in the store; re-raise the
-        recorded production error, if any — the facade's ``join``."""
+        recorded production error, if any — the facade's ``join``.
+
+        Checks are ordered so a failed server is never mistaken for a slow
+        one: the recorded error re-raises the moment it is set (even when
+        the timeout happens to be due at the same wake), and a server shut
+        down before the epoch landed fails fast instead of waiting out
+        ``timeout_s``."""
         deadline = (None if timeout_s is None
                     else time.monotonic() + timeout_s)
         with self._cv:
-            while (epoch not in self._finished_epochs
-                   and self._error is None):
+            while True:
+                if self._error is not None:
+                    raise self._error
+                if epoch in self._finished_epochs:
+                    return
+                if self._shutdown:
+                    raise TransportError(
+                        f"episode server shut down before epoch {epoch} "
+                        "was produced")
                 if deadline is not None and time.monotonic() >= deadline:
                     raise TimeoutError(f"epoch {epoch} not produced in time")
                 self._cv.wait(timeout=0.25)
-            if self._error is not None:
-                raise self._error
 
     def _fail(self, err: BaseException) -> None:
         """Record a terminal production error and fail consumers fast —
@@ -219,6 +331,7 @@ class RemoteEpisodeServer:
                 with span("store_put", "store",
                           {"epoch": epoch, "episode": ep}):
                     self.store.put_unique(epoch, ep, pairs)
+                finished: list[int] = []
                 with self._cv:
                     self._next_put += 1
                     done = self._next_put >= self.num_episodes
@@ -226,10 +339,13 @@ class RemoteEpisodeServer:
                         self._finished_epochs.add(epoch)
                         self._epoch = None
                         if self._epoch_queue:
-                            self._activate_locked(self._epoch_queue.popleft())
+                            finished = self._activate_locked(
+                                self._epoch_queue.popleft())
                     self._cv.notify_all()
                 if done:
                     self.store.finish_epoch(epoch)
+                for e in finished:
+                    self.store.finish_epoch(e)
         except BaseException as e:  # noqa: BLE001 — any put failure is terminal
             self._fail(e)
 
@@ -336,6 +452,10 @@ class RemoteEpisodeServer:
         counter_add("transport.chunks_recv")
         if dup:
             counter_add("transport.dup_chunks")
+        elif self.first_chunk_s is None:
+            # benign write race between connection threads: both candidates
+            # are within microseconds, either is a valid recovery-time mark
+            self.first_chunk_s = time.monotonic() - self._t0
         complete = assembled is not None
         tr = _trace.tracer()
         if tr is not None:
@@ -364,8 +484,9 @@ class RemoteEpisodeServer:
                 st = c.stats()
                 for k in agg:
                     agg[k] += st.get(k, 0)
-        agg["dup_chunks"] = self.assembler.dup_chunks
-        agg["chunks_applied"] = self.assembler.chunks_applied
+        agg["dup_chunks"] = self.assembler.dup_chunks + self._dup_base
+        agg["chunks_applied"] = (self.assembler.chunks_applied
+                                 + self._applied_base)
         applied = max(1, agg["chunks_applied"])
         agg["resend_rate"] = agg["dup_chunks"] / applied
         return agg
@@ -380,11 +501,18 @@ class RemoteProducer:
     pipelined onto the wire, then their acks drained; any transport failure
     (including an ack timeout after an injected ``net.drop``) triggers
     reconnect-and-resend of the unacked remainder.
+
+    Server loss — connect refused, hello timeout, dead socket — is an
+    outage to ride out, not a death sentence: reconnects follow a jittered
+    capped exponential backoff (seeded per host, so a fleet of producers
+    desynchronizes instead of thundering against a restarting coordinator)
+    and only give up once one outage exceeds ``server_grace_s`` seconds.
     """
 
     def __init__(self, address, host: str, graph, wcfg: WalkConfig, *,
                  heartbeat_s: float = 1.0, ack_timeout_s: float = 10.0,
-                 connect_timeout_s: float = 30.0):
+                 connect_timeout_s: float = 30.0,
+                 server_grace_s: float = 30.0):
         self.address = tuple(address)
         self.host = host
         self.engine = WalkEngine(graph, wcfg)
@@ -392,47 +520,105 @@ class RemoteProducer:
         self.heartbeat_s = heartbeat_s
         self.ack_timeout_s = ack_timeout_s
         self.connect_timeout_s = connect_timeout_s
+        self.server_grace_s = server_grace_s
         self._conn: FramedSocket | None = None
         self.reconnects = 0
         self.chunks_resent = 0
+        self.outage_s = 0.0             # cumulative seconds disconnected
+        self._outage_t0: float | None = None
+        self._ever_connected = False
+        self._retry = RetryPolicy(
+            attempts=None, backoff_s=0.05, mult=2.0, max_backoff_s=1.0,
+            jitter=0.5, retry_on=(TransportError, ConnectionError, OSError))
+        # deterministic per host, decorrelated across hosts
+        self._retry_seed = zlib.crc32(host.encode())
 
     # -------------------------------------------------------------- connection
     def _connection(self) -> FramedSocket:
-        if self._conn is None:
-            s = _connect(self.address, timeout_s=self.connect_timeout_s)
-            s.settimeout(self.ack_timeout_s)
-            conn = FramedSocket(s)
-            conn.send({"t": "hello", "host": self.host})
-            conn.recv()
-            self._conn = conn
-        return self._conn
+        """Current work connection, (re)established under the backoff
+        policy. A dead server is tolerated for ``server_grace_s`` seconds
+        per outage — measured from the moment the connection was lost, not
+        from this call — then the last connection error propagates. The
+        first-ever connection uses ``connect_timeout_s`` instead (that is a
+        startup race against the server's listen(), not an outage)."""
+        if self._conn is not None:
+            return self._conn
+        window = (self.server_grace_s if self._ever_connected
+                  else self.connect_timeout_s)
+        # _outage_t0 is set by _drop_connection when a live connection is
+        # lost; None here means this is the startup connect (not an outage)
+        outage = self._outage_t0 is not None
+        t0 = self._outage_t0 if outage else time.monotonic()
+        delays = self._retry.delays(seed=self._retry_seed + self.reconnects)
+        while True:
+            s = None
+            try:
+                s = _connect_once(self.address)
+                s.settimeout(self.ack_timeout_s)
+                conn = FramedSocket(s)
+                conn.send({"t": "hello", "host": self.host})
+                conn.recv()             # hello timeout == ack timeout
+                self._conn = conn
+                self._ever_connected = True
+                if outage:
+                    dt = time.monotonic() - t0
+                    self.outage_s += dt
+                    observe("producer.outage_s", dt)
+                    self._outage_t0 = None
+                return conn
+            except (TransportError, ConnectionError, OSError) as e:
+                if s is not None:
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+                waited = time.monotonic() - t0
+                if waited >= window:
+                    raise TransportError(
+                        f"host {self.host!r}: server {self.address!r} "
+                        f"unreachable for {waited:.1f}s (> grace "
+                        f"{window:.1f}s): {e}") from e
+                time.sleep(next(delays, self._retry.backoff_s))
 
     def _drop_connection(self) -> None:
         if self._conn is not None:
             self._conn.close()
             self._conn = None
             self.reconnects += 1
+            counter_add("transport.producer_reconnects")
+        if self._outage_t0 is None:
+            self._outage_t0 = time.monotonic()
 
     # -------------------------------------------------------------- heartbeats
     def _heartbeat_loop(self, stop: threading.Event) -> None:
         # dedicated connection: a long GIL-heavy walk on the work connection
         # must not starve the lease — heartbeats ride their own socket and
-        # are never fault-injected
+        # are never fault-injected. While the server is unreachable, retry
+        # pacing comes from the jittered backoff policy (capped at the
+        # heartbeat interval) instead of a bare wait(heartbeat_s), so the
+        # fleet's reattach probes spread out across a takeover.
         conn = None
+        delays = None
         while not stop.is_set():
             try:
                 if conn is None:
-                    s = _connect(self.address,
-                                 timeout_s=self.connect_timeout_s)
+                    s = _connect_once(self.address)
                     s.settimeout(self.ack_timeout_s)
                     conn = FramedSocket(s)
                 conn.send({"t": "hb", "host": self.host})
                 conn.recv()
+                delays = None                   # healthy: reset the backoff
+                wait = self.heartbeat_s
             except (TransportError, ConnectionError, OSError):
                 if conn is not None:
                     conn.close()
                 conn = None
-            stop.wait(self.heartbeat_s)
+                if delays is None:
+                    delays = self._retry.delays(
+                        seed=self._retry_seed ^ 0x5BEA7)
+                wait = min(self.heartbeat_s,
+                           next(delays, self.heartbeat_s))
+            stop.wait(wait)
         if conn is not None:
             conn.close()
 
@@ -443,10 +629,12 @@ class RemoteProducer:
                               name=f"hb-{self.host}", daemon=True)
         hb.start()
         try:
-            failures = 0
             while True:
+                # outside the retry except: a _connection() failure means
+                # the outage outlived the grace window — terminal, and the
+                # informative grace error must propagate, not be retried
+                conn = self._connection()
                 try:
-                    conn = self._connection()
                     conn.send({"t": "work", "host": self.host})
                     reply, _ = conn.recv()
                     # a duplicated final chunk can leave one stray ack in
@@ -454,13 +642,8 @@ class RemoteProducer:
                     # fully acked — skip past it
                     while reply.get("t") == "ack":
                         reply, _ = conn.recv()
-                    failures = 0
                 except (TransportError, ConnectionError, OSError):
                     self._drop_connection()
-                    failures += 1
-                    if failures >= 3:
-                        break      # server is gone: nothing left to produce
-                    time.sleep(WAIT_POLL_S)
                     continue
                 t = reply.get("t")
                 if t == "done":
@@ -498,8 +681,10 @@ class RemoteProducer:
                 self.chunks_resent += len(chunks) - len(acked)
                 counter_add("transport.chunks_resent",
                             len(chunks) - len(acked))
+            # grace-window exhaustion in _connection() is terminal and must
+            # escape with its own error, not count as a transport attempt
+            conn = self._connection()
             try:
-                conn = self._connection()
                 for c, n, pairs in chunks:
                     if c in acked:
                         continue
@@ -535,13 +720,14 @@ class RemoteProducer:
                                       "attempts": attempts})
 
 
-def _producer_main(address, host, graph, wcfg, inject_specs, heartbeat_s):
+def _producer_main(address, host, graph, wcfg, inject_specs, heartbeat_s,
+                   server_grace_s=30.0):
     """Subprocess entry (multiprocessing ``spawn``): fresh interpreter, own
     fault-plan counters, no jax import anywhere on this path."""
     if inject_specs:
         install_plan(FaultPlan(inject_specs))
-    RemoteProducer(address, host, graph, wcfg,
-                   heartbeat_s=heartbeat_s).run()
+    RemoteProducer(address, host, graph, wcfg, heartbeat_s=heartbeat_s,
+                   server_grace_s=server_grace_s).run()
 
 
 class _EpochHandle:
@@ -580,7 +766,9 @@ class RemoteWalkCoordinator:
     def __init__(self, graph, wcfg: WalkConfig, store, *,
                  num_producers: int = 2, heartbeat_s: float = 1.0,
                  lease_s: float = 10.0, mode: str = "process",
-                 ack_timeout_s: float = 10.0, inject_specs=()):
+                 ack_timeout_s: float = 10.0, inject_specs=(),
+                 port: int = 0, recover: bool = False,
+                 server_grace_s: float = 30.0):
         self.graph = graph
         self.wcfg = wcfg
         self.store = store
@@ -589,9 +777,15 @@ class RemoteWalkCoordinator:
         self.ack_timeout_s = ack_timeout_s
         self.mode = mode
         self.inject_specs = list(inject_specs)
+        self.lease_s = lease_s
+        self.server_grace_s = server_grace_s
         self.server = RemoteEpisodeServer(store, wcfg.episodes, wcfg.seed,
-                                          lease_s=lease_s)
+                                          lease_s=lease_s, port=port,
+                                          recover=recover)
+        self.takeovers = 1 if recover else 0
+        self._recovered_base = 0
         self._procs: list = []
+        self._producers: list[RemoteProducer] = []   # thread mode only
 
     def start(self) -> None:
         self.server.start()
@@ -599,10 +793,13 @@ class RemoteWalkCoordinator:
         # snapshot (metrics.jsonl, diagnostics.json) reads the live
         # aggregation instead of anyone keeping a parallel copy
         register_source("transport", self.transport_stats)
-        register_source("host_health", self.server.health.snapshot)
+        # read through self.server dynamically — a restart_server() swap
+        # must not leave the registry or the store watchdog holding bound
+        # methods of a dead server's health registry
+        register_source("host_health", lambda: self.server.health.snapshot())
         set_producer = getattr(self.store, "set_producer", None)
         if callable(set_producer):
-            set_producer(self.alive, self.server.health.describe)
+            set_producer(self.alive, lambda: self.server.health.describe())
         for i in range(self.num_producers):
             host = f"walker-{i}"
             if self.mode == "process":
@@ -610,22 +807,28 @@ class RemoteWalkCoordinator:
                 p = ctx.Process(
                     target=_producer_main,
                     args=(self.server.address, host, self.graph, self.wcfg,
-                          self.inject_specs, self.heartbeat_s),
+                          self.inject_specs, self.heartbeat_s,
+                          self.server_grace_s),
                     name=host, daemon=True)
                 p.start()
             else:
                 prod = RemoteProducer(self.server.address, host, self.graph,
                                       self.wcfg, heartbeat_s=self.heartbeat_s,
-                                      ack_timeout_s=self.ack_timeout_s)
+                                      ack_timeout_s=self.ack_timeout_s,
+                                      server_grace_s=self.server_grace_s)
+                self._producers.append(prod)
 
                 def _run(prod=prod):
                     # An injected crash simulates a SIGKILL'd producer
-                    # process: the thread must die silently (liveness is
-                    # detected via the lease, not the exception). Any
+                    # process, and a grace-window TransportError a producer
+                    # that gave up on a dead server: either way the thread
+                    # must die silently (liveness is detected via the
+                    # lease, not the exception) — exactly like the
+                    # subprocess path, where the process just exits. Any
                     # other exception still escapes to the caller.
                     try:
                         prod.run()
-                    except InjectedFault:
+                    except (InjectedFault, TransportError):
                         pass
 
                 p = threading.Thread(target=_run, name=host, daemon=True)
@@ -643,6 +846,58 @@ class RemoteWalkCoordinator:
 
     def transport_stats(self) -> dict:
         return self.server.transport_stats()
+
+    # -------------------------------------------------------------- failover
+    def restart_server(self) -> float:
+        """Simulated coordinator failover inside one process: a
+        SIGKILL-equivalent drop of the current episode server, then a
+        successor on the SAME port that reconstructs the work queue from
+        the store and re-submits the epochs the trainer had handed the
+        predecessor. Producers are untouched — they ride out the outage in
+        their reconnect backoff and reattach to the successor. Returns the
+        takeover wall seconds (kill → successor accepting).
+
+        The full-process-death path is ``--coordinator-resume``: there the
+        launcher itself builds a ``recover=True`` coordinator and
+        re-submits epochs from the resume cursor instead."""
+        old = self.server
+        t0 = time.monotonic()
+        old.kill()
+        # trainer-side knowledge that survives in this process: which
+        # epochs were submitted and which already finished. The successor
+        # re-derives everything else (put cursor, pending set) from the
+        # store at activation.
+        with old._cv:
+            finished = set(old._finished_epochs)
+            epochs = ([old._epoch] if old._epoch is not None else [])
+            epochs += list(old._epoch_queue)
+        srv = RemoteEpisodeServer(
+            self.store, self.wcfg.episodes, self.wcfg.seed,
+            lease_s=self.lease_s, port=old.address[1], recover=True,
+            carry_stats=old.transport_stats())
+        srv._finished_epochs |= finished
+        self.server = srv
+        self.takeovers += 1
+        self._recovered_base += old.recovered_episodes
+        srv.start()
+        for e in epochs:
+            srv.submit_epoch(e)
+        return time.monotonic() - t0
+
+    def failover_stats(self) -> dict:
+        """Takeover counters for diagnostics.json and the bench row.
+        ``producer_outage_s`` only aggregates thread-mode producers —
+        subprocess producers keep their clocks in their own interpreter."""
+        out = {"takeovers": self.takeovers,
+               "recovered_episodes": (self._recovered_base
+                                      + self.server.recovered_episodes),
+               "producer_reconnects": sum(p.reconnects
+                                          for p in self._producers),
+               "producer_outage_s": round(sum(p.outage_s
+                                              for p in self._producers), 3)}
+        if self.server.first_chunk_s is not None:
+            out["first_chunk_s"] = round(self.server.first_chunk_s, 3)
+        return out
 
     def close(self) -> None:
         # drain first: producers see "done" on their next work request and

@@ -81,6 +81,14 @@ class SampleStore:
     def get(self, epoch: int, episode: int, *, block: bool = True) -> np.ndarray:
         raise NotImplementedError
 
+    def accepted_episodes(self, epoch: int) -> list[int]:
+        """Episodes of ``epoch`` this store has already accepted — resident
+        OR consumed-and-dropped. This is the coordinator-failover recovery
+        source: a restarted episode server re-derives its ordered-put
+        cursor from the longest contiguous accepted prefix and only
+        re-produces what the store never took (``repro.walk.remote``)."""
+        return []
+
     def finish_epoch(self, epoch: int) -> None:
         pass
 
@@ -163,6 +171,11 @@ class MemorySampleStore(SampleStore):
         # overwrite with bitwise-identical pairs
         self.put(epoch, episode, pairs)
         return True
+
+    def accepted_episodes(self, epoch):
+        with self._cv:
+            return sorted({ep for (e, ep) in self._data if e == epoch}
+                          | {ep for (e, ep) in self._dropped if e == epoch})
 
     def finish_epoch(self, epoch):
         with self._cv:
@@ -348,6 +361,19 @@ class DiskSampleStore(SampleStore):
         touching the resident/backpressure bookkeeping — the repair path
         after a ``CorruptEpisodeError`` re-walk."""
         self._publish(epoch, episode, pairs)
+
+    def accepted_episodes(self, epoch):
+        # published files survive a coordinator restart (the disk store's
+        # whole point); in-process drops with keep=False deleted theirs, so
+        # union the dropped set back in — after a real process death that
+        # set is empty and the deleted prefix is simply re-produced
+        pre = f"epoch{epoch:04d}_ep"
+        eps = {int(f[len(pre):len(pre) + 4]) for f in os.listdir(self.root)
+               if f.startswith(pre) and f.endswith(".npy")
+               and not f.endswith(".tmp.npy")}
+        with self._cv:
+            eps |= {ep for (e, ep) in self._dropped if e == epoch}
+        return sorted(eps)
 
     def finish_epoch(self, epoch):
         with open(self._done_path(epoch), "w") as f:

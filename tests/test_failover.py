@@ -1,0 +1,474 @@
+"""Coordinator failover: restartable episode server, producer outage grace.
+
+The invariant under test: killing the episode server mid-epoch and starting
+a recovering successor on the same port is invisible to the trainer — the
+run stays BITWISE identical to an uninterrupted one, with zero lost and
+zero double-stored chunks. The pieces that make that hold, each gated
+here: store-reconstructed work-queue state (``accepted_episodes`` →
+contiguous-prefix put cursor), producer reconnect under a jittered
+grace-bounded backoff (``RetryPolicy.jitter``/``max_elapsed_s``),
+``wait_epoch`` failing fast instead of masquerading errors as timeouts,
+and the ``HostHealth`` lease edges a takeover leans on.
+"""
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import powerlaw_graph
+from repro.runtime import TransportError
+from repro.runtime.retry import RetryPolicy, call_with_retry
+from repro.runtime.transport import FramedSocket, HostHealth
+from repro.walk import (MemorySampleStore, RemoteWalkCoordinator, WalkConfig,
+                        WalkEngine)
+from repro.walk.remote import RemoteEpisodeServer, RemoteProducer
+from repro.walk.store import DiskSampleStore
+
+GRAPH = None
+
+
+def _graph():
+    global GRAPH
+    if GRAPH is None:
+        GRAPH = powerlaw_graph(300, 4, seed=1)
+    return GRAPH
+
+
+def _wcfg():
+    return WalkConfig(walk_length=6, window=3, episodes=4, seed=3,
+                      chunk_size=40)
+
+
+# ---------------------------------------------------------------------------
+# retry: jitter determinism, caps, grace windows
+# ---------------------------------------------------------------------------
+def test_retry_jitter_deterministic_per_seed_and_bounded():
+    p = RetryPolicy(attempts=7, backoff_s=0.1, mult=2.0, max_backoff_s=0.4,
+                    jitter=0.5)
+    a = list(p.delays(seed=11))
+    b = list(p.delays(seed=11))
+    c = list(p.delays(seed=12))
+    assert a == b                          # replayable per seed
+    assert a != c                          # decorrelated across seeds
+    for i, d in enumerate(a):              # each delay within ±jitter of base
+        base = min(0.1 * 2.0 ** i, 0.4)
+        assert 0.5 * base <= d <= 1.5 * base
+
+
+def test_retry_zero_jitter_keeps_geometric_stream_with_cap():
+    p = RetryPolicy(attempts=4, backoff_s=0.1)
+    assert list(p.delays()) == pytest.approx([0.1, 0.2, 0.4])
+    capped = RetryPolicy(attempts=4, backoff_s=0.1, max_backoff_s=0.15)
+    assert list(capped.delays()) == pytest.approx([0.1, 0.15, 0.15])
+
+
+def test_retry_max_elapsed_window_reraises_last_error():
+    calls = []
+
+    def fn():
+        calls.append(time.monotonic())
+        raise ValueError("still down")
+
+    p = RetryPolicy(attempts=None, backoff_s=0.01, mult=1.0,
+                    max_elapsed_s=0.15, retry_on=(ValueError,))
+    t0 = time.monotonic()
+    with pytest.raises(ValueError, match="still down"):
+        call_with_retry(fn, policy=p)
+    assert len(calls) > 3                  # it really retried inside the window
+    assert time.monotonic() - t0 < 2.0     # ...and gave up soon after it closed
+
+
+def test_retry_unbounded_attempts_retries_past_small_counts():
+    state = {"n": 0}
+
+    def fn():
+        state["n"] += 1
+        if state["n"] < 20:
+            raise OSError("flaky")
+        return "ok"
+
+    p = RetryPolicy(attempts=None, backoff_s=0.0, retry_on=(OSError,))
+    assert call_with_retry(fn, policy=p) == "ok"
+    assert state["n"] == 20
+
+
+# ---------------------------------------------------------------------------
+# wait_epoch: errors beat timeouts; shutdown fails fast
+# ---------------------------------------------------------------------------
+def test_wait_epoch_reraises_recorded_error_immediately():
+    srv = RemoteEpisodeServer(MemorySampleStore(), 4, seed=3)
+    try:
+        srv._fail(TransportError("producers imploded"))
+        t0 = time.monotonic()
+        with pytest.raises(TransportError, match="imploded"):
+            srv.wait_epoch(0, timeout_s=30.0)
+        assert time.monotonic() - t0 < 1.0   # never waited out the timeout
+    finally:
+        srv.close()
+
+
+def test_wait_epoch_error_set_while_waiting_wakes_promptly():
+    srv = RemoteEpisodeServer(MemorySampleStore(), 4, seed=3)
+    try:
+        threading.Timer(0.2, srv._fail,
+                        args=(TransportError("late death"),)).start()
+        t0 = time.monotonic()
+        with pytest.raises(TransportError, match="late death"):
+            srv.wait_epoch(0, timeout_s=30.0)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        srv.close()
+
+
+def test_wait_epoch_fails_fast_after_kill():
+    srv = RemoteEpisodeServer(MemorySampleStore(), 4, seed=3)
+    srv.start()
+    srv.kill()
+    t0 = time.monotonic()
+    with pytest.raises(TransportError, match="shut down"):
+        srv.wait_epoch(0, timeout_s=30.0)
+    assert time.monotonic() - t0 < 1.0
+
+
+# ---------------------------------------------------------------------------
+# HostHealth lease edges
+# ---------------------------------------------------------------------------
+def test_lease_boundary_exact_expiry_is_dead_and_reported():
+    h = HostHealth(lease_s=10.0)
+    h.beat("w0")
+    with h._mu:
+        h._last["w0"] = time.monotonic() - h.lease_s   # age == lease exactly
+    # the boundary is closed on the dead side: alive uses strict <,
+    # expired uses >= — the same instant can never be both
+    assert not h.alive("w0") and not h.any_alive()
+    assert h.expired() == ["w0"]
+    with h._mu:
+        h._last["w0"] = time.monotonic() - h.lease_s + 5.0   # well inside
+    assert h.alive("w0") and h.expired() == []
+
+
+def test_lease_resurrection_after_expiry_and_mark_dead():
+    h = HostHealth(lease_s=10.0)
+    h.beat("w0")
+    with h._mu:
+        h._last["w0"] = time.monotonic() - 60.0
+    assert h.expired() == ["w0"]
+    h.mark_dead("w0")
+    assert h.expired() == []               # marked: not re-reported
+    assert not h.alive("w0")
+    h.beat("w0")                           # the host reconnected and beats
+    assert h.alive("w0") and h.any_alive()
+    assert h.expired() == []
+    assert h.snapshot()["w0"]["alive"]
+    # a second expiry cycle on the resurrected host behaves identically
+    with h._mu:
+        h._last["w0"] = time.monotonic() - 60.0
+    assert h.expired() == ["w0"]
+
+
+def test_lease_concurrent_beats_vs_expiry_sweep():
+    """Reclaim-loop shape under load: beat threads hammer while a sweeper
+    runs expired()/mark_dead/any_alive — no dict-mutation crashes, no host
+    both beating and staying dead."""
+    h = HostHealth(lease_s=0.02)
+    stop = threading.Event()
+    errors = []
+
+    def beater(host):
+        try:
+            while not stop.is_set():
+                h.beat(host)
+        except Exception as e:             # noqa: BLE001 — the assertion
+            errors.append(e)
+
+    threads = [threading.Thread(target=beater, args=(f"w{i}",), daemon=True)
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    t_end = time.monotonic() + 0.5
+    while time.monotonic() < t_end:
+        for host in h.expired():
+            h.mark_dead(host)
+        h.any_alive()
+        h.describe()
+        h.snapshot()
+    stop.set()
+    for t in threads:
+        t.join(timeout=5.0)
+    assert not errors
+    h.beat("w0")                           # beats always win over mark_dead
+    assert h.alive("w0")
+    time.sleep(0.05)
+    assert h.expired() != []               # and leases still lapse afterwards
+
+
+# ---------------------------------------------------------------------------
+# store scan: the recovery source
+# ---------------------------------------------------------------------------
+def test_accepted_episodes_memory_store_counts_resident_and_dropped():
+    store = MemorySampleStore()
+    pairs = np.arange(8, dtype=np.int32).reshape(4, 2)
+    assert store.accepted_episodes(0) == []
+    store.put(0, 0, pairs)
+    store.put(0, 1, pairs)
+    store.get(0, 0)
+    store.drop(0, 0)                       # consumed: still accepted
+    store.put(1, 0, pairs)
+    assert store.accepted_episodes(0) == [0, 1]
+    assert store.accepted_episodes(1) == [0]
+    assert store.accepted_episodes(2) == []
+
+
+def test_accepted_episodes_disk_store_survives_new_instance(tmp_path):
+    pairs = np.arange(8, dtype=np.int32).reshape(4, 2)
+    store = DiskSampleStore(str(tmp_path), keep=True)
+    store.put(0, 0, pairs)
+    store.put(0, 2, pairs)                 # a gap: episode 1 never landed
+    # a FRESH instance — the post-coordinator-death view — sees the files
+    reborn = DiskSampleStore(str(tmp_path), keep=True, fresh=False)
+    assert reborn.accepted_episodes(0) == [0, 2]
+    assert reborn.accepted_episodes(1) == []
+    # keep=False drops delete their file but stay accepted in-process
+    vol = DiskSampleStore(str(tmp_path / "vol"), keep=False)
+    vol.put(0, 0, pairs)
+    vol.get(0, 0)
+    vol.drop(0, 0)
+    assert vol.accepted_episodes(0) == [0]
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: kill the server mid-epoch, recover, stay bitwise-identical
+# ---------------------------------------------------------------------------
+def test_coordinator_restart_mid_epoch_bitwise_and_exactly_once():
+    g, wcfg = _graph(), _wcfg()
+    ref = WalkEngine(g, wcfg)
+    # depth=1 forces puts to trail consumption, so the kill below is
+    # guaranteed to land mid-epoch (the last episode cannot have been put)
+    store = MemorySampleStore(depth=1, stall_timeout_s=60.0)
+    coord = RemoteWalkCoordinator(g, wcfg, store, num_producers=2,
+                                  heartbeat_s=0.1, lease_s=5.0,
+                                  mode="thread", ack_timeout_s=1.0,
+                                  server_grace_s=20.0)
+    coord.start()
+    try:
+        h = coord.epoch_walker()
+        h.start_async(0)
+        for ep in range(2):
+            got = store.get(0, ep)
+            np.testing.assert_array_equal(
+                np.asarray(got).view(np.uint8),
+                ref.episode_pairs(0, ep).view(np.uint8))
+            store.drop(0, ep)
+
+        takeover_s = coord.restart_server()
+        assert takeover_s < 10.0
+
+        for ep in range(2, wcfg.episodes):
+            got = store.get(0, ep)
+            np.testing.assert_array_equal(
+                np.asarray(got).view(np.uint8),
+                ref.episode_pairs(0, ep).view(np.uint8),
+                err_msg=f"episode {ep} diverged across the takeover")
+            store.drop(0, ep)
+        h.join()                           # reads coord.server: the successor
+        assert h.finished()
+
+        fo = coord.failover_stats()
+        assert fo["takeovers"] == 1
+        # the consumed episodes (and possibly one the put thread raced in)
+        # were recovered from the store, never re-produced
+        k = fo["recovered_episodes"]
+        assert 2 <= k < wcfg.episodes
+        assert fo["producer_reconnects"] >= 1
+        # exactly-once across the takeover: the successor applied precisely
+        # the unique chunks of the episodes it re-produced — anything a
+        # reattaching producer double-sent was counted dup and discarded
+        unique = sum(len(list(ref.episode_chunk_stream(0, ep)))
+                     for ep in range(k, wcfg.episodes))
+        assert coord.server.assembler.chunks_applied == unique
+        # carried aggregates stay monotonic: the merged view counts at
+        # least every unique chunk of the whole epoch
+        total = sum(len(list(ref.episode_chunk_stream(0, ep)))
+                    for ep in range(wcfg.episodes))
+        assert coord.transport_stats()["chunks_applied"] >= total
+    finally:
+        coord.close()
+
+
+def test_coordinator_restart_between_epochs_recovers_full_epoch():
+    """A takeover after an epoch fully landed must finish it from the scan
+    alone (no re-production) and produce the NEXT epoch normally."""
+    g, wcfg = _graph(), _wcfg()
+    ref = WalkEngine(g, wcfg)
+    store = MemorySampleStore(depth=wcfg.episodes, stall_timeout_s=60.0)
+    coord = RemoteWalkCoordinator(g, wcfg, store, num_producers=1,
+                                  heartbeat_s=0.1, lease_s=5.0,
+                                  mode="thread", ack_timeout_s=1.0,
+                                  server_grace_s=20.0)
+    coord.start()
+    try:
+        h0 = coord.epoch_walker()
+        h0.start_async(0)
+        h0.join()                          # epoch 0 fully resident
+        coord.restart_server()
+        # resubmitting the finished epoch is idempotent; epoch 1 activates
+        # with an empty scan and produces normally
+        coord.server.submit_epoch(0)
+        h1 = coord.epoch_walker()
+        h1.start_async(1)
+        for epoch in (0, 1):
+            for ep in range(wcfg.episodes):
+                got = store.get(epoch, ep)
+                np.testing.assert_array_equal(
+                    np.asarray(got).view(np.uint8),
+                    ref.episode_pairs(epoch, ep).view(np.uint8))
+                store.drop(epoch, ep)
+        h1.join()
+        assert coord.failover_stats()["takeovers"] == 1
+    finally:
+        coord.close()
+
+
+# ---------------------------------------------------------------------------
+# producer grace window
+# ---------------------------------------------------------------------------
+def _dead_address():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    addr = s.getsockname()
+    s.close()                              # nobody listens here any more
+    return addr
+
+
+def test_producer_outage_grace_window_expires_with_informative_error():
+    prod = RemoteProducer(_dead_address(), "w0", _graph(), _wcfg(),
+                          ack_timeout_s=0.3, connect_timeout_s=0.6,
+                          server_grace_s=0.6)
+    t0 = time.monotonic()
+    with pytest.raises(TransportError, match="unreachable.*grace"):
+        prod._connection()
+    waited = time.monotonic() - t0
+    assert 0.5 <= waited < 10.0            # gave up only once the window shut
+
+
+def test_producer_rides_out_outage_shorter_than_grace():
+    """Kill the server with no clean handshake; the producer's backoff loop
+    must reattach to a successor on the same port inside the grace window
+    and report the outage it rode out."""
+    g, wcfg = _graph(), _wcfg()
+    store = MemorySampleStore(depth=4)
+    srv = RemoteEpisodeServer(store, wcfg.episodes, wcfg.seed, lease_s=10.0)
+    srv.start()
+    prod = RemoteProducer(srv.address, "w0", g, wcfg, ack_timeout_s=1.0,
+                          server_grace_s=15.0)
+    prod._connection()                     # attached to the first server
+    port = srv.address[1]
+    srv.kill()
+    prod._drop_connection()
+    succ = RemoteEpisodeServer(store, wcfg.episodes, wcfg.seed,
+                               lease_s=10.0, port=port, recover=True)
+    succ.start()
+    try:
+        conn = prod._connection()          # reattaches inside the grace
+        assert isinstance(conn, FramedSocket)
+        assert prod.reconnects == 1
+        assert prod.outage_s > 0.0
+    finally:
+        succ.close()
+        prod._drop_connection()
+
+
+def test_producer_hello_timeout_counts_against_grace():
+    """A server that accepts but never answers hello (half-dead coordinator)
+    must burn the grace window, not hang forever."""
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(4)
+    held = []
+    stop = threading.Event()
+
+    def hold():
+        lsock.settimeout(0.1)
+        while not stop.is_set():
+            try:
+                s, _ = lsock.accept()      # accept, say nothing
+                held.append(s)
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+
+    t = threading.Thread(target=hold, daemon=True)
+    t.start()
+    prod = RemoteProducer(lsock.getsockname(), "w0", _graph(), _wcfg(),
+                          ack_timeout_s=0.2, connect_timeout_s=0.7,
+                          server_grace_s=0.7)
+    try:
+        with pytest.raises(TransportError, match="grace"):
+            prod._connection()
+    finally:
+        stop.set()
+        t.join(timeout=5.0)
+        for s in held:
+            s.close()
+        lsock.close()
+
+
+# ---------------------------------------------------------------------------
+# launcher: --coordinator-resume end-to-end, bitwise vs uninterrupted run
+# ---------------------------------------------------------------------------
+_TRAIN_ARGS = ["--arch", "tencent-embedding", "--nodes", "240", "--dim", "16",
+               "--epochs", "2", "--episodes", "3", "--subparts", "2",
+               "--minibatch", "32", "--negatives", "4", "--neg-pool", "256",
+               "--walk-workers", "2", "--seed", "3"]
+
+
+@pytest.mark.slow
+def test_coordinator_resume_training_is_bitwise_identical(tmp_path):
+    """Kill a remote-walker training run mid-epoch, restart it with
+    --resume --coordinator-resume against the surviving disk store: the
+    recovering server skips every episode the store already accepted, and
+    the final embeddings are bitwise-identical to an uninterrupted
+    in-process run."""
+    from repro.launch.train import main as train_main
+    from repro.runtime import InjectedFault
+    from repro.train.checkpoint import load_arrays
+
+    ref_dir = str(tmp_path / "ref")
+    chaos_dir = str(tmp_path / "chaos")
+    train_main(_TRAIN_ARGS + ["--out-dir", ref_dir])
+
+    rw = ["--remote-walkers", "1", "--heartbeat-s", "0.2", "--lease-s", "5",
+          "--server-grace-s", "20", "--store", "disk", "--keep-samples"]
+    with pytest.raises(InjectedFault):
+        train_main(_TRAIN_ARGS + rw
+                   + ["--out-dir", chaos_dir, "--ckpt-every", "1",
+                      "--inject", "train.episode:crash:key=1/1"])
+    assert not os.path.exists(os.path.join(chaos_dir, "embeddings_2.npz"))
+
+    train_main(_TRAIN_ARGS + rw + ["--out-dir", chaos_dir,
+                                   "--ckpt-every", "1",
+                                   "--resume", "--coordinator-resume"])
+    ref, _ = load_arrays(os.path.join(ref_dir, "embeddings_2.npz"))
+    got, _ = load_arrays(os.path.join(chaos_dir, "embeddings_2.npz"))
+    for key in ("vertex", "context"):
+        assert ref[key].dtype == got[key].dtype
+        np.testing.assert_array_equal(
+            np.asarray(ref[key]).view(np.uint8),
+            np.asarray(got[key]).view(np.uint8),
+            err_msg=f"{key} table diverged across coordinator failover")
+
+
+def test_coordinator_resume_flag_validation():
+    from repro.launch.train import main as train_main
+
+    with pytest.raises(SystemExit, match="remote-walkers"):
+        train_main(_TRAIN_ARGS + ["--out-dir", "/tmp/x", "--resume",
+                                  "--coordinator-resume"])
+    with pytest.raises(SystemExit, match="resume"):
+        train_main(_TRAIN_ARGS + ["--out-dir", "/tmp/x",
+                                  "--remote-walkers", "1",
+                                  "--coordinator-resume"])
