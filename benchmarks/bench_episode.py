@@ -39,7 +39,8 @@ import jax                                                   # noqa: E402
 from common import append_run                                # noqa: E402
 from repro import obs                                        # noqa: E402
 from repro.core import (EpisodePipeline, HybridConfig,          # noqa: E402
-                        HybridEmbeddingTrainer, build_episode_blocks)
+                        HybridEmbeddingTrainer, TieredEmbeddingTrainer,
+                        build_episode_blocks)
 from repro.graph.generators import powerlaw_graph            # noqa: E402
 from repro.runtime import FaultPlan, clear_plan, install_plan  # noqa: E402
 from repro.walk import MemorySampleStore, WalkConfig, WalkEngine  # noqa: E402
@@ -55,6 +56,12 @@ MESHES = [(1, 1), (1, 2)]
 # the host pipeline, not the kernels — one impl is enough
 DATAFLOW_SHAPES = [(64, 64)]
 DATAFLOW_SMOKE_SHAPES = [(32, 32)]
+
+# tiered-cache comparison (resident vs stream vs hot-row cache): like the
+# dataflow rows, this measures dataflow structure, not kernels — one shape
+CACHE_SHAPES = [(64, 64)]
+CACHE_SMOKE_SHAPES = [(32, 32)]
+CACHE_BUDGET_FRAC = 0.25     # HBM rows per table, as a fraction of all rows
 
 
 def bench_one(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
@@ -530,6 +537,122 @@ def bench_dataflow(impl: str, B: int, d: int, mesh_shape, *, nodes: int,
     return rows
 
 
+def bench_cache(B: int, d: int, mesh_shape, *, nodes: int, samples: int,
+                episodes: int, dtype: str, budget_frac: float = CACHE_BUDGET_FRAC,
+                seed: int = 0):
+    """Tiered hot-row cache vs the fully-resident trainer (``core.tiered``).
+
+    Three trainers run the SAME powerlaw episode schedule (zipf-1.3
+    endpoints — the paper's hot-vertex traffic shape) from the same init:
+
+    cache_resident — HybridEmbeddingTrainer, both tables fully in device
+                     memory: the throughput ceiling the cache must chase.
+    cache_stream   — TieredEmbeddingTrainer with ``hbm_rows=0``: every
+                     block's working set streams host→device→host, the
+                     bytes floor any cache must beat.
+    cache_tiered   — TieredEmbeddingTrainer with ``hbm_rows`` =
+                     ``budget_frac`` of the table rows (default 25%): hot
+                     rows update in place in the HBM cache, cold rows
+                     stream in/out around them.
+
+    All three must produce bitwise-identical embeddings — asserted hard; a
+    fast cache that trains different numbers is a correctness regression
+    posting a speedup. Timing includes staging/plan/write-back host work
+    (each mode pays its real per-episode cost). Gates (warnings): tiered
+    hit_rate >= 0.8 on the powerlaw stream, tiered samples/s within 20% of
+    resident, and the byte model must show the cache cut host<->device
+    traffic vs budget-0 streaming.
+    """
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    cfg = HybridConfig(dim=d, minibatch=B, negatives=8, subparts=2,
+                       neg_pool=2048, impl="ref", dtype=dtype, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    def zipf_ids(n):
+        # rank-frequency powerlaw over the id space; out-of-range draws
+        # clip to the last id (it just becomes one more hot node)
+        return (np.minimum(rng.zipf(1.3, size=n), nodes) - 1).astype(np.int64)
+
+    # two untimed warm episodes: the first compiles the block step, the
+    # second absorbs the cold-start promotion wave (the cache fills from
+    # empty) and its residency-op compiles — the timed episodes then
+    # measure the steady state a long-running job sees
+    warm = 2
+    eps_pairs = [np.stack([zipf_ids(samples), zipf_ids(samples)], axis=1)
+                 for _ in range(episodes + warm)]
+    # negative pools follow the observed traffic skew (deg^0.75, as the
+    # trainers build them) — identical degrees in every mode keeps the
+    # negative streams, and therefore the bitwise gate, aligned
+    deg = np.bincount(np.concatenate(eps_pairs).ravel(), minlength=nodes)
+    budget = int(budget_frac * nodes)
+
+    def run_mode(mode, hbm_rows):
+        if hbm_rows is None:
+            tr = HybridEmbeddingTrainer(nodes, mesh, cfg, degrees=deg)
+        else:
+            tr = TieredEmbeddingTrainer(nodes, mesh, cfg, degrees=deg,
+                                        hbm_rows=hbm_rows)
+        tr.init_embeddings()
+        # pin one block shape across episodes so each mode compiles once
+        ebs = [build_episode_blocks(p, tr.part, pad_multiple=B)
+               for p in eps_pairs]
+        cap = max(eb.block_cap for eb in ebs)
+        ebs = [build_episode_blocks(p, tr.part, block_cap=cap,
+                                    pad_multiple=B) for p in eps_pairs]
+        for eb in ebs[:warm]:                # warm episodes: untimed
+            tr.train_episode(eb)
+        t0 = time.perf_counter()
+        loss = 0.0
+        for eb in ebs[warm:]:
+            loss = tr.train_episode(eb)      # float() inside = full sync
+        dt = time.perf_counter() - t0
+        n_samples = sum(int(eb.counts.sum()) for eb in ebs[warm:])
+        row = {
+            "mode": mode, "impl": cfg.impl, "B": B, "d": d,
+            "mesh": list(mesh_shape), "nodes": nodes,
+            "episodes": episodes, "samples_per_epoch": n_samples // episodes,
+            "hbm_rows": hbm_rows, "budget_frac": (None if hbm_rows is None
+                                                  else hbm_rows / nodes),
+            "samples_per_s": n_samples / dt, "loss": loss,
+        }
+        if hbm_rows is not None:
+            st = tr.cache_stats()
+            row.update(hit_rate=st["hit_rate"],
+                       hbm_bytes_moved=st["hbm_bytes_moved"],
+                       host_bytes_moved=st["host_bytes_moved"],
+                       promotions=(st["vertex"]["promotions"]
+                                   + st["context"]["promotions"]),
+                       evictions=(st["vertex"]["evictions"]
+                                  + st["context"]["evictions"]))
+        return tr, row
+
+    res_tr, res_row = run_mode("cache_resident", None)
+    str_tr, str_row = run_mode("cache_stream", 0)
+    tie_tr, tie_row = run_mode("cache_tiered", budget)
+
+    # the load-bearing gate: same numbers, to the bit, in every mode
+    v_ref = res_tr.embeddings().view(np.uint8)
+    c_ref = res_tr.context_embeddings().view(np.uint8)
+    for name, tr in (("cache_stream", str_tr), ("cache_tiered", tie_tr)):
+        assert np.array_equal(v_ref, tr.embeddings().view(np.uint8)), (
+            "tiered trainer diverged from resident (vertex)", name)
+        assert np.array_equal(c_ref, tr.context_embeddings().view(np.uint8)), (
+            "tiered trainer diverged from resident (context)", name)
+
+    if tie_row["hit_rate"] < 0.8:
+        print(f"WARNING: cache hit rate {tie_row['hit_rate']:.3f} < 0.8 at "
+              f"budget {budget}/{nodes} rows under powerlaw traffic")
+    if tie_row["samples_per_s"] < 0.8 * res_row["samples_per_s"]:
+        print(f"WARNING: tiered throughput >20% below resident: "
+              f"{tie_row['samples_per_s']:.1f} < "
+              f"{res_row['samples_per_s']:.1f} samples/s")
+    if tie_row["host_bytes_moved"] >= str_row["host_bytes_moved"]:
+        print(f"WARNING: cache moved no fewer host<->device bytes than "
+              f"budget-0 streaming: {tie_row['host_bytes_moved']} >= "
+              f"{str_row['host_bytes_moved']}")
+    return [res_row, str_row, tie_row]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -552,6 +675,8 @@ def main():
     ap.add_argument("--dataflow-episodes", type=int, default=None)
     ap.add_argument("--no-dataflow", action="store_true",
                     help="skip the sync-vs-streamed dataflow comparison")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="skip the tiered-cache comparison")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_episode.json"))
     args = ap.parse_args()
@@ -654,6 +779,28 @@ def main():
                       f"{by_mode['coordinator_failover']:.1f} < "
                       f"{by_mode['remote_walkers']:.1f}")
 
+    # ---- tiered cache: resident vs stream vs hot-row cache, bitwise-gated
+    cache_results = []
+    if not args.no_cache:
+        c_shapes = CACHE_SMOKE_SHAPES if args.smoke else CACHE_SHAPES
+        c_nodes = args.nodes or (512 if args.smoke else 2048)
+        c_samples = args.samples or (1024 if args.smoke else 8192)
+        c_eps = args.episodes or (2 if args.smoke else 3)
+        for (B, d) in c_shapes:
+            rows = bench_cache(B, d, MESHES[0], nodes=c_nodes,
+                               samples=c_samples, episodes=c_eps,
+                               dtype=args.dtype)
+            cache_results.extend(rows)
+            for r in rows:
+                extra = ""
+                if r["hbm_rows"] is not None:
+                    extra = (f"  hit_rate {r['hit_rate']:.3f} "
+                             f"hbm_bytes {r['hbm_bytes_moved']} "
+                             f"host_bytes {r['host_bytes_moved']}")
+                print(f"cache    B={r['B']:4d} d={r['d']:4d} "
+                      f"{r['mode']:14s} {r['samples_per_s']:10.1f} "
+                      f"samples/s{extra}")
+
     run = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "smoke": args.smoke,
@@ -669,6 +816,7 @@ def main():
                  "absolute numbers on TPU"),
         "results": results,
         "dataflow_results": dataflow_results,
+        "cache_results": cache_results,
     }
     n = append_run(args.out, "sgns_episode", run)
     print(f"wrote {os.path.abspath(args.out)} "

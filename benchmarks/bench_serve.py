@@ -46,8 +46,12 @@ from repro.embed_serve import topk as tk                     # noqa: E402
 from repro.launch import roofline                            # noqa: E402
 
 # "quant" routes through the two-tier scan (int8 kernel on TPU, int8 jnp
-# path on CPU — same auto rule as pallas/xla)
-IMPLS = ("xla", "pallas", "quant")
+# path on CPU — same auto rule as pallas/xla); "tiered" puts the hot-row
+# exact tier (25% budget, powerlaw-ranked) in front of a compacted int8
+# cold remainder — hot hits skip quantization entirely, recall stays 1.0
+IMPLS = ("xla", "pallas", "quant", "tiered")
+
+TIERED_BUDGET_FRAC = 0.25
 
 # (N, d, k, batch): table rows x dim, top-k, queries per request batch
 FULL_SHAPES = [
@@ -71,7 +75,10 @@ def scan_bytes_model(store: ShardedEmbeddingStore, batch: int, k: int,
     re-scan per block; the jnp paths materialize all scores in one pass.
     Rescore (quant only): the tier-two gather reads m = ceil(k * overfetch)
     full-precision rows per query from the exact shards."""
-    if impl.startswith("quant"):
+    if impl == "tiered":
+        # exact hot rows + compacted int8 cold remainder (value + f32 scale)
+        tier_bytes = store.hot_tier_stats()["scan_bytes_tiered"]
+    elif impl.startswith("quant"):
         tier_bytes = sum(
             int(np.prod(q8.shape)) * q8.dtype.itemsize
             + int(np.prod(sc.shape)) * sc.dtype.itemsize
@@ -79,13 +86,21 @@ def scan_bytes_model(store: ShardedEmbeddingStore, batch: int, k: int,
     else:
         tier_bytes = sum(int(np.prod(sh.shape)) * sh.dtype.itemsize
                          for sh in store.shards)
-    kernel_path = impl == "pallas" or (impl.startswith("quant")
-                                       and jax.default_backend() == "tpu")
+    kernel_path = impl == "pallas" or (
+        impl in ("tiered",) + tuple(i for i in IMPLS if i.startswith("quant"))
+        and jax.default_backend() == "tpu")
     scans = (-(-batch // tk.DEFAULT_BLOCK_Q)) if kernel_path else 1
     rescore = 0
-    if impl.startswith("quant"):
-        itemsize = store.shards[0].dtype.itemsize
-        d = store.dim
+    itemsize = store.shards[0].dtype.itemsize
+    d = store.dim
+    if impl == "tiered":
+        # only the cold (quant) tier rescores; hot hits are already exact
+        for t in store.hot_tiers:
+            if t.cold_valid == 0:
+                continue
+            m = overfetch_m(k, store.overfetch, t.cold_valid)
+            rescore += batch * m * d * itemsize
+    elif impl.startswith("quant"):
         for s, sh in enumerate(store.shards):
             if store.valid[s] == 0:
                 continue
@@ -98,8 +113,17 @@ def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
               iters: int, requests: int, dtype: str, seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
     table = rng.normal(0, 0.1, size=(N, d)).astype(np.float32)
-    quant = "int8" if impl.startswith("quant") else None
+    quant = "int8" if (impl.startswith("quant")
+                       or impl == "tiered") else None
     store = ShardedEmbeddingStore.from_array(table, dtype=dtype, quant=quant)
+    hot_rows = None
+    if impl == "tiered":
+        # powerlaw access counts (zipf-1.3 traffic over the id space, the
+        # training side's hot-row shape) rank the hot set; 25% budget
+        traffic = np.minimum(rng.zipf(1.3, size=8 * N), N) - 1
+        hot_rows = store.enable_hot_tier(
+            int(TIERED_BUDGET_FRAC * N),
+            counts=np.bincount(traffic, minlength=N).astype(np.float64))
     queries = table[rng.integers(0, N, size=batch)]
 
     # direct path: fixed-batch latency + scan-bytes roofline
@@ -128,7 +152,18 @@ def bench_one(impl: str, N: int, d: int, k: int, batch: int, *,
     _, req_lat, wall = drive_open_loop(batcher, stream)
     batcher.close()
 
+    extra = {}
+    if impl == "tiered":
+        st = store.hot_tier_stats()
+        extra = {
+            "hot_rows": hot_rows,
+            "hot_budget_frac": hot_rows / N,
+            "returned_hot_frac": st["returned_hot_frac"],
+            "scan_bytes_tiered": st["scan_bytes_tiered"],
+            "scan_bytes_quant": st["scan_bytes_quant"],
+        }
     return {
+        **extra,
         "impl": impl,
         "N": N,
         "d": d,

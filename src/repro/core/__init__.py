@@ -1,14 +1,21 @@
 """The paper's primary contribution: hybrid model-data parallel node-embedding
 training with hierarchical partitioning, two-level ring rotation, and a
-pipelined episode trainer. See DESIGN.md §1/§5."""
+pipelined episode trainer. See DESIGN.md §1/§5. ``tiered`` extends the
+trainer past device memory: host-RAM master tables + a fixed-budget HBM
+cache of hot rows, bitwise identical to the resident path."""
 from repro.core.hybrid import (HybridConfig, HybridEmbeddingTrainer,
                                StagedEpisodeBlocks, build_episode_fn)
 from repro.core.partition import NodePartition, EpisodeBlocks, build_episode_blocks
 from repro.core.baseline_ps import ParameterServerTrainer
 from repro.core.pipeline import EpisodePipeline
+from repro.core.tiered import (CACHE_POLICIES, CacheStats,
+                               StagedTieredEpisode, TieredEmbeddingTrainer,
+                               TieredTable)
 
 __all__ = [
     "HybridConfig", "HybridEmbeddingTrainer", "StagedEpisodeBlocks",
     "build_episode_fn", "NodePartition", "EpisodeBlocks",
     "build_episode_blocks", "ParameterServerTrainer", "EpisodePipeline",
+    "CACHE_POLICIES", "CacheStats", "StagedTieredEpisode",
+    "TieredEmbeddingTrainer", "TieredTable",
 ]

@@ -62,6 +62,16 @@ class NodePartition:
         subrow = local % self.rows_per_subpart
         return shard, sub, subrow
 
+    def subpart_global_rows(self, sub: int, subrows: np.ndarray,
+                            shard: int = 0) -> np.ndarray:
+        """Inverse of :meth:`locate` for one (shard, subpart): row-within-
+        subpart indices -> rows into the padded global table. The map is
+        monotone in ``subrows``, which is what lets the tiered trainer's
+        compact working-set remap preserve the kernels' sort/equality
+        structure (see ``core.tiered``)."""
+        return (shard * self.padded_rows_per_shard
+                + sub * self.rows_per_subpart + subrows)
+
     def shard_coord(self, shard: np.ndarray):
         """Flat shard id -> mesh coordinate arrays."""
         coords = []

@@ -49,8 +49,18 @@ class EpisodePipeline:
         the block shape so streaming consumers compile once).
     depth : max episodes in flight (prefetched but not yet consumed).
     stage_fn : optional third-stage callable ``EpisodeBlocks -> staged``
-        (e.g. ``HybridEmbeddingTrainer.stage_blocks`` for device_put); when
-        None the pipeline is two-stage and ``get`` returns EpisodeBlocks.
+        (e.g. ``HybridEmbeddingTrainer.stage_blocks`` for device_put, or
+        ``TieredEmbeddingTrainer.stage_blocks``, which additionally
+        precomputes each block's unique-row miss sets, compact remaps and
+        negative replay one stage ahead of training — the walk store sees
+        every id before the trainer does); when None the pipeline is
+        two-stage and ``get`` returns EpisodeBlocks.
+        Contract: stage_fn may run on a stage worker OR inline on the
+        consumer thread (prefetch miss, ``_build_sync``), so it must not
+        touch consumer-thread-only state — the tiered trainer defers all
+        cache promotion and cold-row *value* reads to ``train_episode``
+        for exactly this reason (a stage-time value read could race an
+        in-flight episode's write-back and break bitwise replay).
     drop_consumed : call ``store.drop(epoch, episode)`` once the build stage
         has bucketed the pairs — with a bounded store this is what frees the
         walker's backpressure slots.

@@ -19,6 +19,16 @@ shard (``embed_serve.quant``), enabling the two-tier scan
 (``impl="quant"``): int8 first pass at 4x less scan traffic, exact rescore
 of the over-fetched survivors, same cross-shard merge.
 
+``enable_hot_tier(budget, counts=...)`` physically splits each shard into
+an exact hot tier (the budget's hottest rows by observed access counts —
+hub nodes under power-law traffic) and a compacted int8 cold remainder.
+``impl="tiered"`` then scans the hot tier exactly (hits return exact
+rows, so hub results never pay quantization error) and runs the quant
+scan + exact rescore over only the cold rows; both per-shard lists merge
+under the one smaller-index tie rule. Hot/returned-from-hot counters feed
+``repro.obs`` and ``hot_tier_stats()`` for the bench's hit-rate ×
+scan-bytes model.
+
 Degraded mode: ``topk(shard_timeout_s=...)`` runs each shard's scan as its
 own task; shards that miss the deadline are excluded from the merge and the
 response is tagged degraded (``return_meta=True`` → :class:`TopKMeta` with
@@ -41,13 +51,14 @@ from repro.core.partition import NodePartition
 from repro.embed_serve import quant as qz
 from repro.embed_serve import topk as tk
 from repro.kernels import ref as kref
+from repro.obs import counter_add, gauge_set
 from repro.runtime import fault_point
 from repro.train.checkpoint import load_arrays
 
 _ON_TPU = jax.default_backend() == "tpu"
 
 QUERY_IMPLS = ("auto", "pallas", "rowwise", "xla",
-               "quant", "quant_pallas", "quant_xla")
+               "quant", "quant_pallas", "quant_xla", "tiered")
 QUANT_TIERS = (None, "int8")
 
 _UNSET = object()   # "use the store's shard_timeout_s" vs an explicit None
@@ -60,6 +71,26 @@ class TopKMeta:
     degraded: bool = False
     failed_shards: tuple = ()
     timeout_s: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _HotShard:
+    """One shard's hot/cold physical split (``enable_hot_tier``).
+
+    hot_shard holds the shard's hot rows exactly (served dtype), cold_*
+    the compacted remainder: exact rows (the rescore source), the int8
+    scan copy, and the compact-row → global-id maps. Row counts are
+    padded to scan-tile multiples; *_valid mask the padding out.
+    """
+
+    hot_shard: object
+    hot_map: object
+    hot_valid: int
+    cold_shard: object
+    cold_q8: object
+    cold_sc: object
+    cold_map: object
+    cold_valid: int
 
 
 class ShardedEmbeddingStore:
@@ -83,6 +114,11 @@ class ShardedEmbeddingStore:
         self.shard_timeout_s = shard_timeout_s  # None = never degrade
         self._pool = None                     # lazy shard-scan executor
         self._pool_mu = threading.Lock()
+        self.hot_tiers = None                 # per-shard _HotShard or None
+        self.hot_budget = 0
+        self._hot_mask = None                 # (num_nodes,) bool, host
+        self._tiered_bn = block_n             # hot-aware cold-scan tile
+        self._hot_stats = {"queries": 0, "returned": 0, "returned_hot": 0}
 
     # ------------------------------------------------------------- loading
     @classmethod
@@ -173,6 +209,9 @@ class ShardedEmbeddingStore:
     def _dispatch_shard(self, s: int, q, k: int, impl: str, ov: float):
         """Dispatch shard s's scan (async) → (scores, GLOBAL ids) device
         arrays. Sub-k shards keep the IDX_SENTINEL so they lose the merge."""
+        if impl == "tiered":
+            # hot/cold split scans carry their own global-id maps
+            return self._dispatch_shard_tiered(s, q, k, ov)
         shard = self.shards[s]
         if impl == "pallas":
             v, i = tk.topk_mips(shard, q, k=k, valid=self.valid[s],
@@ -197,6 +236,158 @@ class ShardedEmbeddingStore:
         gi = jnp.where(i == tk.IDX_SENTINEL, tk.IDX_SENTINEL, i + s * rows)
         return v, gi
 
+    # ------------------------------------------------------------ hot tier
+    def enable_hot_tier(self, budget: int, *, ids=None, counts=None) -> int:
+        """Split every shard into an exact hot tier + compacted int8 cold
+        remainder for ``impl="tiered"`` queries.
+
+        The hot set is the ``budget`` hottest rows by ``counts`` (observed
+        access counts — training-episode traffic, degrees, or a query log;
+        ties break toward the smaller id so the split is deterministic), or
+        an explicit ``ids`` list. Hot hits are scanned exactly in the
+        served dtype; cold rows get a fresh compacted int8 copy (genuinely
+        fewer cold-scan bytes than the full quant tier — the byte model
+        in bench_serve measures exactly this). The cold-scan tile is
+        re-chosen with the hot tile's VMEM footprint accounted
+        (``topk.choose_block_n(hot_rows=...)``). Returns the realized hot
+        row count.
+        """
+        if ids is None:
+            if counts is None:
+                raise ValueError("enable_hot_tier needs ids or counts")
+            counts = np.asarray(counts, np.float64)
+            if counts.shape != (self.num_nodes,):
+                raise ValueError(f"counts shape {counts.shape} != "
+                                 f"({self.num_nodes},)")
+            order = np.lexsort((np.arange(self.num_nodes), -counts))
+            order = order[counts[order] > 0]
+            ids = np.sort(order[: budget])
+        else:
+            ids = np.unique(np.asarray(ids, np.int64))
+            ids = ids[(ids >= 0) & (ids < self.num_nodes)][: budget]
+        mask = np.zeros(self.num_nodes, bool)
+        mask[ids] = True
+        rows = self.part.padded_rows_per_shard
+        bn = self.block_n
+        tiers = []
+        for s, dev in enumerate(self.devices):
+            n_valid = self.valid[s]
+            sh = np.asarray(self.shards[s])       # padded (rows_p, d) host
+            d = sh.shape[1]
+            loc_mask = np.zeros(sh.shape[0], bool)
+            loc_mask[:n_valid] = mask[s * rows: s * rows + n_valid]
+            hot_loc = np.flatnonzero(loc_mask)
+            cold_loc = np.flatnonzero(~loc_mask[:n_valid])
+
+            def _compact(loc):
+                n = loc.size
+                n_p = max(bn, -(-max(n, 1) // bn) * bn)
+                tbl = np.zeros((n_p, d), sh.dtype)
+                tbl[:n] = sh[loc]
+                gmap = np.zeros(n_p, np.int32)
+                gmap[:n] = (s * rows + loc).astype(np.int32)
+                return tbl, gmap, n
+
+            hot_tbl, hot_map, n_hot = _compact(hot_loc)
+            cold_tbl, cold_map, n_cold = _compact(cold_loc)
+            q8, sc = qz.quantize_rows(cold_tbl)
+            tiers.append(_HotShard(
+                hot_shard=jax.device_put(hot_tbl, dev),
+                hot_map=jax.device_put(jnp.asarray(hot_map), dev),
+                hot_valid=n_hot,
+                cold_shard=jax.device_put(cold_tbl, dev),
+                cold_q8=jax.device_put(q8, dev),
+                cold_sc=jax.device_put(sc, dev),
+                cold_map=jax.device_put(jnp.asarray(cold_map), dev),
+                cold_valid=n_cold))
+        self.hot_tiers = tiers
+        self.hot_budget = int(ids.size)
+        self._hot_mask = mask
+        self._tiered_bn = min(bn, tk.choose_block_n(
+            self.dim, np.int8, hot_rows=int(ids.size)))
+        self._hot_stats = {"queries": 0, "returned": 0, "returned_hot": 0}
+        gauge_set("serve.hot_tier.rows", int(ids.size))
+        return int(ids.size)
+
+    def hot_tier_stats(self) -> dict:
+        """Serving-side cache telemetry: realized hot rows, the fraction of
+        returned results served from the exact tier, and the modeled scan
+        bytes per query of the tiered vs full-quant layouts."""
+        st = dict(self._hot_stats)
+        d = self.dim
+        item = np.dtype(self.shards[0].dtype).itemsize
+        n_cold = sum(t.cold_valid for t in (self.hot_tiers or []))
+        n_hot = sum(t.hot_valid for t in (self.hot_tiers or []))
+        return {
+            **st,
+            "hot_rows": n_hot,
+            "cold_rows": n_cold,
+            "returned_hot_frac": st["returned_hot"] / max(st["returned"], 1),
+            # per-query scan bytes: exact hot rows + int8 cold (value + f32
+            # scale) vs the untiered int8 scan of every row
+            "scan_bytes_tiered": n_hot * d * item + n_cold * (d + 4),
+            "scan_bytes_quant": (n_hot + n_cold) * (d + 4),
+        }
+
+    def _pad_k(self, v, i, k: int):
+        pad = k - v.shape[1]
+        if pad <= 0:
+            return v, i
+        return (jnp.pad(v, ((0, 0), (0, pad)), constant_values=tk.NEG_INF),
+                jnp.pad(i, ((0, 0), (0, pad)),
+                        constant_values=tk.IDX_SENTINEL))
+
+    def _dispatch_shard_tiered(self, s: int, q, k: int, ov: float):
+        """Shard s under the two-physical-tier layout: exact hot scan +
+        quant-with-rescore cold scan, merged under the global tie rule.
+        Compact → global maps live on the device, so like the plain path
+        nothing syncs until the caller's device_get."""
+        ht = self.hot_tiers[s]
+        outs = []
+        if ht.hot_valid > 0:
+            kh = min(k, ht.hot_shard.shape[0])
+            if _ON_TPU:
+                hv, hi = tk.topk_mips(
+                    ht.hot_shard, q, k=kh, valid=ht.hot_valid,
+                    block_n=min(self._tiered_bn, ht.hot_shard.shape[0]))
+            else:
+                hv, hi = tk.topk_mips_xla(ht.hot_shard, q, k=kh,
+                                          valid=ht.hot_valid)
+            hg = jnp.where(
+                hi == tk.IDX_SENTINEL, tk.IDX_SENTINEL,
+                jnp.take(ht.hot_map,
+                         jnp.minimum(hi, ht.hot_map.shape[0] - 1)))
+            outs.append(self._pad_k(hv, hg, k))
+        if ht.cold_valid > 0:
+            kc = min(k, ht.cold_shard.shape[0])
+            cv, ci = qz.topk_mips_quant_rescored(
+                ht.cold_shard, ht.cold_q8, ht.cold_sc, q, k=kc,
+                overfetch=ov, valid=ht.cold_valid,
+                block_n=min(self._tiered_bn, ht.cold_shard.shape[0]),
+                impl="pallas" if _ON_TPU else "xla",
+                interpret=not _ON_TPU)
+            cg = jnp.where(
+                ci == tk.IDX_SENTINEL, tk.IDX_SENTINEL,
+                jnp.take(ht.cold_map,
+                         jnp.minimum(ci, ht.cold_map.shape[0] - 1)))
+            outs.append(self._pad_k(cv, cg, k))
+        if not outs:
+            raise RuntimeError(f"shard {s} has no valid rows")
+        if len(outs) == 1:
+            return outs[0]
+        return tk.merge_topk(jnp.stack([v for v, _ in outs]),
+                             jnp.stack([i for _, i in outs]), k=k)
+
+    def _note_tiered_result(self, gi) -> None:
+        gi = np.asarray(gi)
+        real = gi[gi != tk.IDX_SENTINEL]
+        n_hot = int(self._hot_mask[real].sum())
+        self._hot_stats["queries"] += int(gi.shape[0])
+        self._hot_stats["returned"] += int(real.size)
+        self._hot_stats["returned_hot"] += n_hot
+        counter_add("serve.hot_tier.hits", n_hot)
+        counter_add("serve.hot_tier.misses", int(real.size) - n_hot)
+
     def _merge(self, per_v, per_i, k: int):
         if len(per_v) == 1:
             return per_v[0], per_i[0]
@@ -214,6 +405,9 @@ class ShardedEmbeddingStore:
         if impl.startswith("quant") and self.qshards is None:
             raise RuntimeError("store has no quantized tier; build it with "
                                "quant='int8'")
+        if impl == "tiered" and self.hot_tiers is None:
+            raise RuntimeError("store has no hot tier; call "
+                               "enable_hot_tier(budget, counts=...) first")
         return impl
 
     def _scan_pool(self) -> ThreadPoolExecutor:
@@ -264,6 +458,8 @@ class ShardedEmbeddingStore:
             staged = jax.device_get(launched)
             gv, gi = self._merge([v for v, _ in staged],
                                  [i for _, i in staged], k)
+            if impl == "tiered":
+                self._note_tiered_result(gi)
             return (gv, gi, TopKMeta()) if return_meta else (gv, gi)
 
         def scan(s):
@@ -290,6 +486,8 @@ class ShardedEmbeddingStore:
                 f"all {len(live)} shard scans failed or timed out "
                 f"({timeout}s); shards: {failed}")
         gv, gi = self._merge(per_v, per_i, k)
+        if impl == "tiered":
+            self._note_tiered_result(gi)
         if return_meta:
             return gv, gi, TopKMeta(degraded=bool(failed),
                                     failed_shards=tuple(sorted(failed)),

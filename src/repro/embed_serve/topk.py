@@ -70,7 +70,8 @@ DEFAULT_PLAN_K = 128    # running-candidate allowance choose_block_n assumes
 # all decisions from static shape/dtype info, nothing at run time)
 # --------------------------------------------------------------------------
 def topk_scan_vmem_bytes(bn: int, d: int, dtype, *, k: int = DEFAULT_PLAN_K,
-                         block_q: int = DEFAULT_BLOCK_Q) -> int:
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         hot_rows: int = 0) -> int:
     """Modeled VMEM working set of one topk_mips/topk_mips_quant launch.
 
     Mirrors the scratch_shapes + compute temporaries: the (2*bn, d)
@@ -79,6 +80,11 @@ def topk_scan_vmem_bytes(bn: int, d: int, dtype, *, k: int = DEFAULT_PLAN_K,
     matrices, the (bq, k + bn) candidate concat the k-pass selection walks
     (vals/idx plus the per-pass masks — modeled at 4 f32-width copies),
     and the revisited (bq, k) output blocks.
+
+    hot_rows models a co-resident hot-tier scan tile: the tiered store
+    runs an exact-f32 scan over min(hot_rows, bn) rows alongside the quant
+    scan of the cold remainder, so that tile's bytes come out of the same
+    budget. 0 (default) is the untiered model, byte-identical to before.
     """
     item = jnp.dtype(dtype).itemsize
     total = 2 * bn * d * item            # double-buffered tile slots
@@ -87,12 +93,14 @@ def topk_scan_vmem_bytes(bn: int, d: int, dtype, *, k: int = DEFAULT_PLAN_K,
     total += block_q * bn * 4 * 2        # (bq, bn) scores + index iota
     total += block_q * (k + bn) * 4 * 4  # select_topk candidate working set
     total += block_q * k * 4 * 2         # running (bq, k) output blocks
+    total += min(hot_rows, bn) * d * 4   # exact hot-tier scan tile (f32)
     return total
 
 
 def choose_block_n(d: int, dtype, *, k: int = DEFAULT_PLAN_K,
                    block_q: int = DEFAULT_BLOCK_Q,
-                   vmem_budget: int = roofline.VMEM_BYTES) -> int:
+                   vmem_budget: int = roofline.VMEM_BYTES,
+                   hot_rows: int = 0) -> int:
     """Scan-tile rows from (d, dtype, k, block_q, VMEM budget).
 
     Largest power-of-two tile (cap 512 — past that the merge cost per tile
@@ -104,7 +112,8 @@ def choose_block_n(d: int, dtype, *, k: int = DEFAULT_PLAN_K,
     """
     bn = 512
     while bn > 8 and topk_scan_vmem_bytes(
-            bn, d, dtype, k=k, block_q=block_q) > vmem_budget // 2:
+            bn, d, dtype, k=k, block_q=block_q,
+            hot_rows=hot_rows) > vmem_budget // 2:
         bn //= 2
     return bn
 

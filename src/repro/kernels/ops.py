@@ -63,13 +63,18 @@ class FusedPlan:
 
 
 def fused_update_vmem_bytes(B: int, d: int, S: int, dtype,
-                            combine: str) -> int:
+                            combine: str, staging_rows: int = 0) -> int:
     """Modeled VMEM scratch for one sgns_fused_update launch of B rows.
 
     Mirrors the scratch_shapes in kernels/sgns.py: gathered tables
     (v/c/n, table dtype), f32 grads (dv/dc/dn), plus the combine's own
     footprint — eq: the (B,B)/(B,S)/(S,S) equality matrices; segsum: the
     sorted finals (table dtype) and f32 segment-prefix buffers.
+
+    staging_rows models a co-resident cache-tier miss-staging block (the
+    tiered trainer streams a (staging_rows, d) cold-row block alongside
+    the update); 0 — the default — is the resident path, byte-identical
+    to the pre-tiering model.
     """
     item = jnp.dtype(dtype).itemsize
     L = B + S
@@ -79,11 +84,13 @@ def fused_update_vmem_bytes(B: int, d: int, S: int, dtype,
         total += (B * B + B * S + S * S) * 4
     else:
         total += (B + L) * d * item + L * d * 4   # fv_s, fc_s, ps_s
+    total += staging_rows * d * item        # cache miss-staging block
     return total
 
 
 def choose_block_b(B: int, d: int, S: int, dtype,
-                   vmem_budget: int = roofline.VMEM_BYTES) -> int:
+                   vmem_budget: int = roofline.VMEM_BYTES,
+                   staging_rows: int = 0) -> int:
     """Pipeline tile rows from (B, d, S, dtype, VMEM budget).
 
     The tile only drives the per-step working set (two f32 (bb, d) row
@@ -97,9 +104,12 @@ def choose_block_b(B: int, d: int, S: int, dtype,
     whole gather is tiny).
     """
     # per-tile active rows: the gathered v/c tile slices (table dtype) plus
-    # the f32 compute temporaries (v/c casts, dv/dc, the (bb, S) logits)
+    # the f32 compute temporaries (v/c casts, dv/dc, the (bb, S) logits);
+    # a cache-tier staging block shrinks the budget the tile can claim
     per_row = 2 * d * jnp.dtype(dtype).itemsize + 4 * (4 * d + 2 * S)
-    cap = max(8, vmem_budget // 8 // per_row)
+    budget = max(per_row * 8,
+                 vmem_budget - staging_rows * d * jnp.dtype(dtype).itemsize)
+    cap = max(8, budget // 8 // per_row)
     bb = min(256, B, cap)
     if bb >= 8:
         bb -= bb % 8                    # f32 sublane alignment
@@ -109,7 +119,8 @@ def choose_block_b(B: int, d: int, S: int, dtype,
 def plan_fused_update(B: int, d: int, S: int, dtype, *,
                       block_b: int | None = None,
                       combine: str | None = None,
-                      vmem_budget: int = roofline.VMEM_BYTES) -> FusedPlan:
+                      vmem_budget: int = roofline.VMEM_BYTES,
+                      staging_rows: int = 0) -> FusedPlan:
     """Pick (block_b, combine, chunk_rows) for a B-row fused update.
 
     combine: equality-matrix reference while its O(B²) matrices fit the
@@ -125,21 +136,33 @@ def plan_fused_update(B: int, d: int, S: int, dtype, *,
     B'² multiplies where segsum does B'·d adds; which side wins is a real-
     TPU measurement (ROADMAP "VMEM model calibration"). Pass combine="eq"
     with a pinned block_b to force eq-sized chunks for that experiment.
+
+    staging_rows reserves VMEM headroom for a co-resident cache-tier
+    miss-staging block (tiered trainer); 0 keeps the plan identical to
+    the pre-tiering model. NOTE: passing staging_rows to a call whose
+    result feeds sgns_step can change block_b and thus the f32 gradient
+    accumulation tiling — the tiered trainer therefore plans with the
+    SAME (block_b=None, staging_rows=0) geometry as the resident path and
+    uses this extended model only to validate that the geometry still
+    fits with the staging block co-resident.
     """
     bb = block_b if block_b is not None else choose_block_b(
-        B, d, S, dtype, vmem_budget)
+        B, d, S, dtype, vmem_budget, staging_rows)
     bb = min(bb, B)
     Bp = -(-B // bb) * bb               # rows after sgns_step's tile padding
     if combine is None:
-        combine = ("eq" if fused_update_vmem_bytes(Bp, d, S, dtype, "eq")
-                   <= vmem_budget else "segsum")
-    if fused_update_vmem_bytes(Bp, d, S, dtype, combine) <= vmem_budget:
+        combine = ("eq"
+                   if fused_update_vmem_bytes(Bp, d, S, dtype, "eq",
+                                              staging_rows) <= vmem_budget
+                   else "segsum")
+    if fused_update_vmem_bytes(Bp, d, S, dtype, combine,
+                               staging_rows) <= vmem_budget:
         chunk = Bp                      # whole batch in one launch
     else:
         chunk = bb
         while (chunk + bb < Bp
-               and fused_update_vmem_bytes(chunk + bb, d, S, dtype, combine)
-               <= vmem_budget):
+               and fused_update_vmem_bytes(chunk + bb, d, S, dtype, combine,
+                                           staging_rows) <= vmem_budget):
             chunk += bb
     return FusedPlan(block_b=bb, combine=combine, chunk_rows=chunk)
 

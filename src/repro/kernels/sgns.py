@@ -338,6 +338,39 @@ def _write_rows(src, idx_sref, tbl_out, count, wsem):
                               wsem.at[p % _NWRITE]).wait()
 
 
+def _write_rows_unique(src, upos_ref, idx_sref, tbl_out, count, wsem):
+    """Deduplicated pipelined write-back: one row DMA per *unique* scatter
+    target instead of one per position.
+
+    upos_ref[j] is the sorted position holding the j-th run's final bytes
+    (host plan: _unique_write_plan); count — the number of runs — is a
+    traced SMEM scalar, so both loops are dynamic-bound fori_loops (the
+    static-drain idiom of _write_rows needs a python range). On skewed
+    batches hub rows collapse many positions into one DMA; the written
+    bytes are identical because every position of a run emits the same
+    final row, so this also retires the old benign write race.
+    """
+    def body(p, _):
+        @pl.when(p >= _NWRITE)
+        def _retire():
+            q = p - _NWRITE
+            pltpu.make_async_copy(
+                src.at[upos_ref[q]], tbl_out.at[idx_sref[upos_ref[q]]],
+                wsem.at[q % _NWRITE]).wait()
+        pltpu.make_async_copy(
+            src.at[upos_ref[p]], tbl_out.at[idx_sref[upos_ref[p]]],
+            wsem.at[p % _NWRITE]).start()
+        return 0
+    jax.lax.fori_loop(0, count, body, 0)
+
+    def drain(p, _):
+        pltpu.make_async_copy(
+            src.at[upos_ref[p]], tbl_out.at[idx_sref[upos_ref[p]]],
+            wsem.at[p % _NWRITE]).wait()
+        return 0
+    jax.lax.fori_loop(jnp.maximum(count - _NWRITE, 0), count, drain, 0)
+
+
 def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
                         vert_hbm, ctx_hbm, ivv_ref, icv_ref, inv_ref,
                         mask_ref, lr_ref,
@@ -384,6 +417,7 @@ def _sgns_update_kernel(iv_ref, ic_ref, in_ref,               # scalar prefetch
 def _sgns_update_kernel_segsum(iv_ref, ic_ref, in_ref,        # scalar prefetch
                                pv_ref, ivs_ref, vflag_ref,
                                pc_ref, icns_ref, cflag_ref,
+                               uv_ref, nv_ref, uc_ref, nc_ref,
                                vert_hbm, ctx_hbm, mask_ref, lr_ref,
                                vert_out, ctx_out, loss_ref,
                                v_s, c_s, n_s, dv_s, dc_s, dn_s,
@@ -403,8 +437,10 @@ def _sgns_update_kernel_segsum(iv_ref, ic_ref, in_ref,        # scalar prefetch
                 back over the run; every position emits its row's final
                 value orig - lr·total into fv/fc.
 
-    All positions of a run emit identical bytes, so the pipelined write-back
-    keeps the eq path's benign-race property.
+    All positions of a run emit identical bytes; the write-back issues ONE
+    DMA per run (uv/uc list each run's last sorted position, nv/nc count
+    the runs) instead of one per position — on skewed batches the hub rows
+    that dominate collapse to single writes.
     """
     i = pl.program_id(0)
     T = pl.num_programs(0)
@@ -463,8 +499,8 @@ def _sgns_update_kernel_segsum(iv_ref, ic_ref, in_ref,        # scalar prefetch
 
         combine(L, pc_ref, cflag_ref, c_grad, c_orig, fc_s)
 
-        _write_rows(fv_s, ivs_ref, vert_out, B, wsem)
-        _write_rows(fc_s, icns_ref, ctx_out, L, wsem)
+        _write_rows_unique(fv_s, uv_ref, ivs_ref, vert_out, nv_ref[0], wsem)
+        _write_rows_unique(fc_s, uc_ref, icns_ref, ctx_out, nc_ref[0], wsem)
 
 
 def _run_flags(sorted_idx):
@@ -474,6 +510,24 @@ def _run_flags(sorted_idx):
     start = jnp.concatenate([one, brk])
     end = jnp.concatenate([brk, one])
     return start.astype(jnp.int32) | (end.astype(jnp.int32) << 1)
+
+
+def _unique_write_plan(sorted_idx):
+    """Write-back dedup plan for a sorted scatter-index vector.
+
+    Returns (upos, n): upos[j] is the sorted position whose buffer row
+    holds run j's final bytes (the run's last position — every position of
+    a run emits identical bytes, see the segsum kernel), n (shape (1,)) is
+    the run count. upos entries past n are zero padding the kernel's
+    dynamic-bound write loop never reads.
+    """
+    L = sorted_idx.shape[0]
+    ar = jnp.arange(L, dtype=jnp.int32)
+    start = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_idx[1:] != sorted_idx[:-1]])
+    rank = jnp.cumsum(start.astype(jnp.int32)) - 1
+    upos = jnp.zeros((L,), jnp.int32).at[rank].max(ar)
+    return upos, (rank[-1] + 1).reshape(1)
 
 
 @functools.partial(jax.jit,
@@ -565,8 +619,10 @@ def sgns_fused_update(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *,
     icn = jnp.concatenate([ic32, in32])
     perm_c = jnp.argsort(icn).astype(jnp.int32)
     icns = jnp.take(icn, perm_c)
+    upos_v, nuniq_v = _unique_write_plan(ivs)
+    upos_c, nuniq_c = _unique_write_plan(icns)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=9,
+        num_scalar_prefetch=13,
         grid=(B // bb,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),            # vert (HBM)
@@ -589,11 +645,13 @@ def sgns_fused_update(vert, ctx, idx_v, idx_c, idx_n, mask, lr, *,
         _sgns_update_kernel_segsum,
         grid_spec=grid_spec,
         out_shape=out_shape,
-        # operands 0..8 are the scalar-prefetch index/permutation vectors.
-        input_output_aliases={9: 0, 10: 1},
+        # operands 0..12 are the scalar-prefetch index/permutation/dedup
+        # vectors.
+        input_output_aliases={13: 0, 14: 1},
         interpret=interpret,
     )(iv32, ic32, in32,
       perm_v, ivs, _run_flags(ivs), perm_c, icns, _run_flags(icns),
+      upos_v, nuniq_v, upos_c, nuniq_c,
       vert, ctx, mask.reshape(B, 1), jnp.asarray(lr, f32).reshape(1, 1))
     return vert2, ctx2, loss[0, 0]
 

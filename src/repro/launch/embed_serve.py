@@ -17,7 +17,11 @@ request-latency percentiles, and recall@k against the numpy oracle.
 that is the CI smoke: trained checkpoint → serve → recall@k == oracle.
 ``--quant int8`` builds the int8 tier at load and (with ``--impl auto``)
 serves through the two-tier scan — the same gate then certifies that the
-``--overfetch`` margin loses nothing vs the exact oracle.
+``--overfetch`` margin loses nothing vs the exact oracle. ``--hot-rows N``
+additionally splits every shard into an exact hot tier (the N hottest rows
+of the request stream's query log) in front of a compacted int8 cold
+remainder and serves ``impl="tiered"`` — hot hits skip quantization, and
+the same recall gate certifies the tier merge.
 
 Degraded mode: ``--shards N`` forces an N-shard layout (repeating devices
 when there are fewer), ``--shard-timeout-ms`` bounds each shard's scan, and
@@ -55,10 +59,15 @@ def main(argv=None):
                          "clock)")
     ap.add_argument("--impl", default="auto",
                     choices=["auto", "pallas", "rowwise", "xla", "quant",
-                             "quant_pallas", "quant_xla"],
+                             "quant_pallas", "quant_xla", "tiered"],
                     help="shard top-k path (auto: pallas on TPU, xla "
                          "elsewhere; pass pallas to force the kernel — "
-                         "interpret mode off-TPU; quant* need --quant int8)")
+                         "interpret mode off-TPU; quant* need --quant int8; "
+                         "tiered needs --hot-rows)")
+    ap.add_argument("--hot-rows", type=int, default=None,
+                    help="exact hot-tier budget per store (rows); ranks the "
+                         "request stream's query log, requires --quant int8 "
+                         "and routes --impl auto to the tiered scan")
     ap.add_argument("--quant", default="none", choices=["none", "int8"],
                     help="build the int8 tier at load; with --impl auto "
                          "this also routes queries through the two-tier "
@@ -125,6 +134,13 @@ def main(argv=None):
     impl = args.impl
     if quant and impl == "auto":
         impl = "quant"            # the tier was built to be used
+    if args.hot_rows is not None:
+        if not quant:
+            ap.error("--hot-rows requires --quant int8 (the cold tier)")
+        if impl in ("auto", "quant"):
+            impl = "tiered"       # ditto for the hot tier
+    if impl == "tiered" and args.hot_rows is None:
+        ap.error("--impl tiered requires --hot-rows")
     if impl.startswith("quant") and not quant:
         ap.error(f"--impl {impl} requires --quant int8")
     if args.overfetch is not None and not quant:
@@ -156,6 +172,14 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     rows = rng.integers(0, store.num_nodes, size=args.queries)
+    if args.hot_rows is not None:
+        # the request stream IS the query log: rank the hot set by it
+        n_hot = store.enable_hot_tier(
+            args.hot_rows,
+            counts=np.bincount(rows, minlength=store.num_nodes)
+                     .astype(np.float64))
+        print(f"hot tier: {n_hot} exact rows + compacted int8 cold "
+              f"remainder per shard")
     queries = store.host_table[rows].astype(np.float32)
     if args.noise:
         queries = queries + rng.normal(0, args.noise, queries.shape)
@@ -224,6 +248,12 @@ def main(argv=None):
           f"{args.qps or 'inf'}) | latency p50 {p50:.2f}ms p99 {p99:.2f}ms "
           f"| {st.batches} batches, mean {st.mean_batch:.1f} req/batch "
           f"| recall@{args.k} {recall:.4f}{deg}")
+    if args.hot_rows is not None:
+        ht = store.hot_tier_stats()
+        print(f"hot tier: {ht['hot_rows']} rows, "
+              f"{ht['returned_hot_frac']*100:.1f}% of returned ids exact-hot, "
+              f"scan bytes {ht['scan_bytes_tiered']} tiered vs "
+              f"{ht['scan_bytes_quant']} full-quant")
     if args.expect_degraded and not n_degraded:
         print("FAIL: --expect-degraded but every response was full-fidelity "
               "(did the fault plan fire?)")

@@ -39,7 +39,7 @@ def train_embedding(args):
     from repro import obs
     from repro.configs.tencent_embedding import SMALL
     from repro.core import (EpisodePipeline, HybridConfig,
-                            HybridEmbeddingTrainer)
+                            HybridEmbeddingTrainer, TieredEmbeddingTrainer)
     from repro.core import eval as ev
     from repro.graph.csr import build_csr
     from repro.graph.generators import powerlaw_graph
@@ -100,8 +100,21 @@ def train_embedding(args):
                        neg_pool=args.neg_pool or SMALL.neg_pool,
                        lr=args.lr, seed=args.seed,
                        impl=args.impl, block_b=args.block_b, **cfg_kw)
-    trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
-                                     degrees=g.degrees())
+    if args.hbm_rows is not None:
+        # tiered tables: host-RAM master + HBM cache of --hbm-rows hot rows;
+        # bitwise identical to the resident trainer at any budget, so the
+        # artifacts (and --resume) are interchangeable between the two
+        trainer = TieredEmbeddingTrainer(
+            g.num_nodes, mesh, cfg, degrees=g.degrees(),
+            hbm_rows=args.hbm_rows, policy=args.cache_policy,
+            spill_dir=(os.path.join(args.out_dir, "master_spill")
+                       if args.cache_spill else None))
+        print(f"tiered tables: hbm_rows={args.hbm_rows} "
+              f"policy={args.cache_policy}"
+              + (" (disk-backed master)" if args.cache_spill else ""))
+    else:
+        trainer = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                         degrees=g.degrees())
 
     # crash-resume: restore tables + (epoch, episode) cursor from the last
     # resume checkpoint; the remaining episodes replay bitwise-identically
@@ -198,6 +211,15 @@ def train_embedding(args):
                                 pipe, test_e, neg_e, mk_walker=mk_walker,
                                 start_epoch=start_epoch,
                                 start_episode=start_episode)
+        if args.hbm_rows is not None:
+            st = trainer.cache_stats()
+            print(f"cache: hit_rate {st['hit_rate']:.3f} "
+                  f"hbm_bytes {st['hbm_bytes_moved']} "
+                  f"host_bytes {st['host_bytes_moved']} "
+                  f"promotions {st['vertex']['promotions']}"
+                  f"+{st['context']['promotions']} "
+                  f"evictions {st['vertex']['evictions']}"
+                  f"+{st['context']['evictions']}")
         if coord is not None:
             st = coord.transport_stats()
             print(f"transport: {st['frames_recv']} frames / "
@@ -458,6 +480,21 @@ def main(argv=None):
     ap.add_argument("--block-b", type=int, default=None,
                     help="pin the fused-kernel tile size (default: "
                          "VMEM-aware autotune in kernels.ops)")
+    ap.add_argument("--hbm-rows", type=int, default=None,
+                    help="train through tiered tables: host-RAM master + an "
+                         "HBM cache of this many hot rows per table "
+                         "(core.tiered; bitwise identical to the resident "
+                         "trainer at any budget). Default: fully resident "
+                         "shards")
+    ap.add_argument("--cache-policy", default="freq",
+                    choices=["freq", "lru"],
+                    help="hot-row promotion policy for --hbm-rows: freq "
+                         "(cumulative access count) or lru (most recent "
+                         "episode touch); ties break to the smaller row id")
+    ap.add_argument("--cache-spill", action="store_true",
+                    help="with --hbm-rows: back the master tables with "
+                         "np.memmap files under OUT_DIR/master_spill "
+                         "(tables beyond host RAM)")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="episodes between atomic resume checkpoints "
                          "(OUT_DIR/resume.npz: tables + cursor, crc-"

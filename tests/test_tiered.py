@@ -1,0 +1,399 @@
+"""Tiered embedding tables (host master + HBM hot-row cache).
+
+The load-bearing gate is bitwise equality: training through the tiered
+table — ANY cache budget, including 0 (pure streaming) and all rows
+(fully cached) — must produce embeddings bitwise identical to the
+resident-shard trainer on the same seed and episode schedule. The compact
+working-set remap is monotone, so every duplicate-combine path sees the
+identical sort/equality structure; these tests are the proof the
+implementation keeps that property.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import HybridConfig, HybridEmbeddingTrainer
+from repro.core import build_episode_blocks
+from repro.core.tiered import (CacheStats, TieredEmbeddingTrainer,
+                               TieredTable)
+from repro.graph.csr import build_csr
+from repro.walk import MemorySampleStore, WalkConfig, WalkEngine
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    rng = np.random.default_rng(7)
+    n = 300
+    a = rng.integers(0, n, 6000)
+    b = (a + rng.zipf(1.8, 6000)) % n     # skewed targets
+    return build_csr(np.stack([a, b], 1), n)
+
+
+def _cfg(**kw):
+    base = dict(dim=16, minibatch=32, negatives=4, subparts=2,
+                neg_pool=256, lr=0.05)
+    base.update(kw)
+    return HybridConfig(**base)
+
+
+def _episodes(g, part, cfg, epochs):
+    store = MemorySampleStore()
+    out = []
+    for epoch in range(epochs):
+        eng = WalkEngine(g, WalkConfig(walk_length=8, window=4, episodes=1,
+                                       seed=epoch), store)
+        eng.run_epoch(epoch)
+        out.append(build_episode_blocks(np.asarray(store.get(epoch, 0)),
+                                        part, pad_multiple=cfg.minibatch))
+        store.drop_epoch(epoch)
+    return out
+
+
+def _train_pair(g, cfg, budget, epochs=3, policy="freq"):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    res = HybridEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees())
+    tie = TieredEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees(),
+                                 hbm_rows=budget, policy=policy)
+    res.init_embeddings()
+    tie.init_embeddings()
+    ebs = _episodes(g, res.part, cfg, epochs)
+    losses = []
+    for i, eb in enumerate(ebs):
+        lr = cfg.lr * max(1 - i / epochs, 0.05)
+        lr_res = res.train_episode(eb, lr=lr)
+        lr_tie = tie.train_episode(eb, lr=lr)
+        losses.append((lr_res, lr_tie))
+    return res, tie, losses
+
+
+@pytest.mark.parametrize("budget", [0, 48, 10**9])
+def test_tiered_bitwise_matches_resident(small_graph, budget):
+    g = small_graph
+    cfg = _cfg()
+    res, tie, losses = _train_pair(g, cfg, budget)
+    v_res, v_tie = res.embeddings(), tie.embeddings()
+    c_res, c_tie = res.context_embeddings(), tie.context_embeddings()
+    assert v_res.dtype == v_tie.dtype
+    assert np.array_equal(
+        v_res.view(np.uint8), v_tie.view(np.uint8)), (
+        "vertex tables diverge at budget %r" % budget)
+    assert np.array_equal(c_res.view(np.uint8), c_tie.view(np.uint8))
+    for lr_res, lr_tie in losses:
+        assert lr_res == pytest.approx(lr_tie, rel=1e-6)
+
+
+def test_tiered_bitwise_lru_policy(small_graph):
+    g = small_graph
+    res, tie, _ = _train_pair(g, _cfg(), 32, epochs=2, policy="lru")
+    assert np.array_equal(res.embeddings().view(np.uint8),
+                          tie.embeddings().view(np.uint8))
+
+
+def test_tiered_rejects_multi_shard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tr = TieredEmbeddingTrainer(64, mesh, _cfg(subparts=1), hbm_rows=8)
+    assert tr.part.num_shards == 1  # single shard accepted
+    if jax.device_count() >= 2:
+        mesh2 = jax.make_mesh((1, 2), ("data", "model"))
+        with pytest.raises(ValueError, match="single-shard"):
+            TieredEmbeddingTrainer(64, mesh2, _cfg(subparts=1), hbm_rows=8)
+
+
+def test_tiered_set_embeddings_resume_bitwise(small_graph):
+    """Crash-resume through the tiered path: install a snapshot, keep
+    training, match the resident trainer doing the same."""
+    g = small_graph
+    cfg = _cfg()
+    res, tie, _ = _train_pair(g, cfg, 64, epochs=2)
+    v, c = res.embeddings(), res.context_embeddings()
+    res.set_embeddings(v, c)
+    tie.set_embeddings(v, c)
+    eb = _episodes(g, res.part, cfg, 3)[-1]
+    res.train_episode(eb, lr=0.03)
+    tie.train_episode(eb, lr=0.03)
+    assert np.array_equal(res.embeddings().view(np.uint8),
+                          tie.embeddings().view(np.uint8))
+
+
+# ----------------------------------------------------------------- policy
+def _mk_table(rows=32, dim=4, budget=8, policy="freq"):
+    return TieredTable(rows, dim, np.float32, budget, policy=policy,
+                       name="t")
+
+
+def test_promotion_deterministic():
+    """Same access history -> identical residency, bit for bit."""
+    ids = np.array([3, 3, 3, 7, 7, 1, 9, 9, 9, 9])
+    tabs = [_mk_table() for _ in range(2)]
+    for t in tabs:
+        t.master[:] = np.arange(32, dtype=np.float32)[:, None]
+        t.note_access(ids, np.ones_like(ids))
+        t.promote()
+    assert np.array_equal(tabs[0].slot_of, tabs[1].slot_of)
+    assert np.array_equal(tabs[0].row_of, tabs[1].row_of)
+    assert np.array_equal(np.asarray(tabs[0].cache),
+                          np.asarray(tabs[1].cache))
+
+
+def test_freq_promotes_hottest_and_evicts():
+    t = _mk_table(budget=2)
+    t.note_access(np.array([1, 2, 3]), np.array([5.0, 3.0, 1.0]))
+    t.promote()
+    assert set(t.row_of) == {1, 2}
+    # row 3 overtakes row 2 -> 2 evicted, 3 promoted, 1 stays
+    t.note_access(np.array([3]), np.array([10.0]))
+    n_promoted, n_evicted = t.promote()
+    assert (n_promoted, n_evicted) == (1, 1)
+    assert set(t.row_of) == {1, 3}
+    assert t.stats.evictions == 1
+
+
+def test_lru_promotes_most_recent():
+    t = _mk_table(budget=2, policy="lru")
+    t.note_access(np.array([1]), np.array([1.0]))
+    t.note_access(np.array([2]), np.array([1.0]))
+    t.note_access(np.array([3]), np.array([1.0]))
+    t.promote()
+    assert set(t.row_of) == {2, 3}
+
+
+def test_eviction_writes_back_updated_rows():
+    t = _mk_table(budget=1)
+    t.master[:] = 1.0
+    t.note_access(np.array([5]), np.array([2.0]))
+    t.promote()
+    t.cache = t.cache.at[t.slot_of[5]].set(42.0)   # simulate an update
+    t.note_access(np.array([6]), np.array([9.0]))
+    t.promote()                                    # 5 evicted for 6
+    assert t.slot_of[5] == -1
+    assert np.all(t.master[5] == 42.0)
+
+
+def test_hit_rate_oracle_powerlaw():
+    """Known powerlaw stream: after one promotion, a 25%-of-rows cache must
+    catch >= the oracle mass of the hot set (here the stream is Zipf-like
+    over row ids, so the top-quarter rows carry >80% of accesses)."""
+    rows, budget = 256, 64
+    rng = np.random.default_rng(0)
+    ranks = rng.zipf(1.3, 200_000)
+    stream = (ranks[ranks <= rows] - 1).astype(np.int64)
+    hot = np.argsort(-np.bincount(stream, minlength=rows),
+                     kind="stable")[:budget]
+    oracle = np.bincount(stream, minlength=rows)[hot].sum() / stream.size
+    assert oracle >= 0.8, oracle
+
+    t = _mk_table(rows=rows, dim=4, budget=budget)
+    ids, counts = np.unique(stream, return_counts=True)
+    t.note_access(ids, counts)
+    t.promote()
+    # replay the stream as traffic through plan(): measured == oracle
+    uids = np.unique(stream)
+    t.plan(uids, uids.size, stream)
+    assert t.stats.hit_rate == pytest.approx(oracle)
+    assert set(t.row_of) == set(hot)
+
+
+def test_cache_stats_byte_model():
+    t = _mk_table(rows=16, dim=4, budget=2)
+    t.note_access(np.array([0, 1]), np.array([3.0, 2.0]))
+    t.promote()
+    host0 = t.stats.host_bytes_moved
+    assert host0 == 2 * 4 * 4                     # 2 promoted rows up
+    uids = np.array([0, 1, 5])
+    t.plan(uids, 4, np.array([0, 0, 1, 5]))
+    s = t.stats
+    assert (s.hits, s.misses) == (3, 1)           # traffic-weighted
+    assert (s.row_hits, s.row_misses) == (2, 1)   # unique-row gathers
+    assert s.hbm_bytes_moved == 2 * 2 * 4 * 4     # 2 hot rows x (in + out)
+    assert s.host_bytes_moved == host0 + 2 * 1 * 4 * 4
+
+
+def test_tiered_trainer_reports_hit_rate(small_graph):
+    g = small_graph
+    _, tie, _ = _train_pair(g, _cfg(), 10**9, epochs=2)
+    st = tie.cache_stats()
+    # budget covers everything: after the first episode's promotion the
+    # second episode is all hits, so the overall rate is far above chance
+    assert st["hit_rate"] > 0.3
+    assert st["hbm_bytes_moved"] > 0
+    assert st["vertex"]["promotions"] > 0
+
+
+def test_disk_spill_master(tmp_path, small_graph):
+    """Optional memmap master tier trains identically to the RAM master."""
+    g = small_graph
+    cfg = _cfg()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ram = TieredEmbeddingTrainer(g.num_nodes, mesh, cfg, degrees=g.degrees(),
+                                 hbm_rows=32)
+    disk = TieredEmbeddingTrainer(g.num_nodes, mesh, cfg,
+                                  degrees=g.degrees(), hbm_rows=32,
+                                  spill_dir=str(tmp_path))
+    ram.init_embeddings()
+    disk.init_embeddings()
+    assert isinstance(disk.vert_t.master, np.memmap)
+    for eb in _episodes(g, ram.part, cfg, 2):
+        ram.train_episode(eb, lr=0.05)
+        disk.train_episode(eb, lr=0.05)
+    assert np.array_equal(ram.embeddings().view(np.uint8),
+                          disk.embeddings().view(np.uint8))
+
+
+# ----------------------------------------------------------- serving tier
+def _serve_store(n=200, d=32, seed=0, **kw):
+    from repro.embed_serve import ShardedEmbeddingStore
+    rng = np.random.default_rng(seed)
+    tbl = rng.integers(-4, 5, size=(n, d)).astype(np.float32)
+    return ShardedEmbeddingStore.from_array(tbl, **kw), tbl
+
+
+def _int_queries(d, q=16, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-3, 4, size=(q, d)).astype(np.float32)
+
+
+@pytest.mark.parametrize("budget", [0, 50, 200])
+def test_tiered_serving_exact_recall(budget):
+    """Integer tables make every dot exact, so the tiered scan must equal
+    the numpy oracle array-for-array at any hot budget (0 = all-cold int8
+    + rescore, 200 = all-exact hot tier)."""
+    store, _ = _serve_store()
+    counts = np.zeros(200)
+    counts[:120] = np.arange(120, 0, -1)    # hottest rows = smallest ids
+    got = store.enable_hot_tier(budget, counts=counts)
+    assert got == min(budget, 120)
+    q = _int_queries(32)
+    v, i = store.topk(q, 10, impl="tiered")
+    rv, ri = store.oracle_topk(q, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-6)
+
+
+def test_tiered_serving_multi_shard():
+    dev = jax.devices()[0]
+    store, _ = _serve_store(n=150, devices=[dev, dev, dev])
+    counts = np.zeros(150)
+    hot_ids = np.arange(0, 150, 4)          # hot rows on every shard
+    counts[hot_ids] = 5
+    store.enable_hot_tier(64, counts=counts)
+    q = _int_queries(32, q=8, seed=2)
+    v, i = store.topk(q, 7, impl="tiered")
+    rv, ri = store.oracle_topk(q, 7)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_tiered_serving_requires_hot_tier():
+    store, _ = _serve_store(n=64)
+    with pytest.raises(RuntimeError, match="hot tier"):
+        store.topk(_int_queries(32, q=2), 5, impl="tiered")
+
+
+def test_tiered_serving_stats_and_byte_model():
+    store, _ = _serve_store()
+    counts = np.zeros(200)
+    counts[:40] = 10.0
+    store.enable_hot_tier(40, counts=counts)
+    q = _int_queries(32, q=8, seed=3)
+    _, i = store.topk(q, 5, impl="tiered")
+    st = store.hot_tier_stats()
+    assert st["queries"] == 8
+    assert st["returned"] == 40
+    hot_frac = np.isin(np.asarray(i), np.arange(40)).mean()
+    assert st["returned_hot_frac"] == pytest.approx(hot_frac)
+    assert st["hot_rows"] == 40 and st["cold_rows"] == 160
+    # tiered cold scan covers 160 rows instead of 200: fewer int8 bytes
+    assert st["scan_bytes_tiered"] == 40 * 32 * 4 + 160 * (32 + 4)
+    assert st["scan_bytes_quant"] == 200 * (32 + 4)
+
+
+def test_tiered_serving_explicit_ids_and_degraded():
+    """Explicit hot ids; degraded path (per-shard timeout executor) still
+    answers exactly through the tiered dispatch."""
+    dev = jax.devices()[0]
+    store, _ = _serve_store(n=120, devices=[dev, dev])
+    store.enable_hot_tier(16, ids=np.arange(0, 120, 8))
+    q = _int_queries(32, q=4, seed=4)
+    v, i, meta = store.topk(q, 6, impl="tiered", shard_timeout_s=60.0,
+                            return_meta=True)
+    assert not meta.degraded
+    rv, ri = store.oracle_topk(q, 6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+# ------------------------------------------------ segsum write-back dedup
+def test_unique_write_plan():
+    import jax.numpy as jnp
+    from repro.kernels.sgns import _unique_write_plan
+    sorted_idx = jnp.asarray(np.array([2, 2, 2, 5, 7, 7], np.int32))
+    upos, n = jax.jit(_unique_write_plan)(sorted_idx)
+    assert int(n[0]) == 3
+    # each run's LAST sorted position (any position holds the final bytes)
+    assert list(np.asarray(upos)[:3]) == [2, 3, 5]
+    upos1, n1 = jax.jit(_unique_write_plan)(
+        jnp.asarray(np.full(8, 4, np.int32)))
+    assert int(n1[0]) == 1 and int(np.asarray(upos1)[0]) == 7
+
+
+def test_segsum_dedup_parity_skewed_batch():
+    """Hub-dominated batch (few distinct rows, long runs) through the
+    deduplicated write-back still matches the reference scatter-add."""
+    import jax.numpy as jnp
+    from repro.kernels import ref, sgns
+    rng = np.random.default_rng(3)
+    Nv, Nc, d, B, S = 40, 50, 32, 64, 8
+    vert = jnp.asarray(rng.standard_normal((Nv, d)).astype(np.float32))
+    ctx = jnp.asarray(rng.standard_normal((Nc, d)).astype(np.float32))
+    iv = jnp.asarray(rng.zipf(1.5, B).clip(max=Nv).astype(np.int32) - 1)
+    ic = jnp.asarray(rng.zipf(1.5, B).clip(max=Nc).astype(np.int32) - 1)
+    inn = jnp.asarray(rng.integers(0, 4, S).astype(np.int32))
+    mask = jnp.ones(B)
+    lr = jnp.float32(0.05)
+    v0, c0, l0 = ref.sgns_step_ref(vert, ctx, iv, ic, inn, mask, lr)
+    v2, c2, l2 = sgns.sgns_fused_update(vert, ctx, iv, ic, inn, mask, lr,
+                                        block_b=32, combine="segsum",
+                                        interpret=True)
+    np.testing.assert_allclose(float(l0), float(l2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v2), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c2), rtol=1e-4,
+                               atol=1e-6)
+
+
+# ------------------------------------------------------------- VMEM models
+def test_fused_vmem_model_staging_rows():
+    from repro.kernels import ops
+    base = ops.fused_update_vmem_bytes(256, 64, 8, np.float32, "segsum")
+    ext = ops.fused_update_vmem_bytes(256, 64, 8, np.float32, "segsum",
+                                      staging_rows=512)
+    assert ext == base + 512 * 64 * 4
+    # default keeps the pre-tiering plan byte-identical
+    p0 = ops.plan_fused_update(256, 64, 8, np.float32)
+    p1 = ops.plan_fused_update(256, 64, 8, np.float32, staging_rows=0)
+    assert p0 == p1
+    # a huge staging block must shrink (never grow) the tile/chunk choice
+    p2 = ops.plan_fused_update(4096, 512, 8, np.float32,
+                               staging_rows=20_000)
+    assert p2.block_b <= p0.block_b or p2.chunk_rows <= 4096
+
+
+def test_topk_vmem_model_hot_rows():
+    from repro.embed_serve import topk as tk
+    base = tk.topk_scan_vmem_bytes(256, 64, np.int8)
+    ext = tk.topk_scan_vmem_bytes(256, 64, np.int8, hot_rows=128)
+    assert ext == base + 128 * 64 * 4
+    # hot tile caps at the scan tile size
+    cap = tk.topk_scan_vmem_bytes(256, 64, np.int8, hot_rows=10**6)
+    assert cap == base + 256 * 64 * 4
+    assert tk.choose_block_n(64, np.int8) == tk.choose_block_n(
+        64, np.int8, hot_rows=0)
+    # enough hot-tier pressure pushes the cold-scan tile down
+    assert tk.choose_block_n(4096, np.float32, hot_rows=4096) <= \
+        tk.choose_block_n(4096, np.float32)
+
+
+def test_cache_stats_dataclass():
+    s = CacheStats()
+    assert s.hit_rate == 0.0
+    s.hits, s.misses = 3, 1
+    assert s.hit_rate == 0.75
+    assert s.as_dict()["hit_rate"] == 0.75
